@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing + CSV rows."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time of a (jitted) call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us_per_call: float | None, derived: str) -> str:
+    us = "" if us_per_call is None else f"{us_per_call:.1f}"
+    return f"{name},{us},{derived}"

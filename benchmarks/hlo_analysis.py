@@ -1,0 +1,295 @@
+"""Trip-count-aware analysis of partitioned HLO.
+
+``compiled.cost_analysis()`` counts while-loop bodies **once**, which
+undercounts scanned-layer programs by ~n_layers x.  This walker parses the
+partitioned HLO text into computation blocks, extracts while-loop trip
+counts from their condition computations, and accumulates dot FLOPs,
+dot/collective byte traffic and collective ops with the correct loop
+multipliers.  Shapes in the partitioned module are per-device, so
+replication and padding waste (e.g. 24 heads on a 16-way axis) are captured
+exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
+                "u8": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return dims, n, n * _DTYPE_BYTES[m.group(1)]
+
+
+def _all_shapes_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: list
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_ops: int = 0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    calls: list = dataclasses.field(default_factory=list)
+
+
+def split_computations(hlo: str):
+    """-> (computations, symbol table of instruction/param shapes)."""
+    comps: dict[str, Computation] = {}
+    symbols: dict[str, str] = {}
+    current = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if not s or s.startswith("//"):
+            continue
+        if s == "}" or s.startswith("} "):
+            current = None
+            continue
+        hm = _HEADER_RE.match(s)
+        if hm and " = " not in s.split("->")[0]:
+            current = Computation(name=hm.group(1), lines=[])
+            comps[current.name] = current
+            # header params: "name: type" pairs
+            for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|"
+                                  r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))",
+                                  s):
+                symbols.setdefault(pm.group(1), pm.group(2))
+            continue
+        im = _INSTR_RE.match(s)
+        if im:
+            symbols[im.group(1)] = im.group(2)
+            if current is not None:
+                current.lines.append(s)
+    return comps, symbols
+
+
+_PASSTHRU_RE = re.compile(
+    r"^[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+"
+    r"(?:fusion|convert|copy|bitcast|transpose|reshape|broadcast)"
+    r"\(\s*%?([\w.\-]+)\s*\)")
+
+_GTE_RE = re.compile(
+    r"get-tuple-element\(\s*%?([\w.\-]+)\s*\),\s*index=(\d+)")
+
+
+def _source_dtype_bytes(name: str, symbols: dict, body_env: dict,
+                        comp_name: str, hops: int = 8) -> int | None:
+    """Per-element bytes of the value actually streamed from memory.
+
+    Follows single-arg passthrough chains (fusion/convert/copy/...) and
+    while-loop plumbing (get-tuple-element of a loop parameter -> the loop's
+    init tuple element).  This undoes the CPU backend's bf16->f32 hoisting:
+    a bf16 weight converted to f32 *outside* the loop is still streamed as
+    bf16 on the TPU target."""
+    cur = name
+    for _ in range(hops):
+        sym = symbols.get(cur, "")
+        m = _PASSTHRU_RE.match(sym)
+        if m:
+            cur = m.group(1)
+            continue
+        # multi-operand elementwise fusion: follow the largest operand
+        mf = re.match(r"^[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?\s+fusion\(([^)]*)\)",
+                      sym)
+        if mf:
+            best, best_elems = None, -1
+            for part in mf.group(1).split(","):
+                cand = part.strip().lstrip("%")
+                sh = _first_shape(symbols.get(cand, ""))
+                if sh and sh[1] > best_elems:
+                    best, best_elems = cand, sh[1]
+            if best is not None:
+                cur = best
+                continue
+            break
+        g = _GTE_RE.search(sym)
+        if g:
+            src, idx = g.group(1), int(g.group(2))
+            src_sym = symbols.get(src, "")
+            if "parameter(" in src_sym:          # loop body parameter
+                elems = body_env.get(comp_name)
+                if elems and idx < len(elems):
+                    cur = elems[idx]
+                    continue
+            mw = re.search(r"while\(\s*%?([\w.\-]+)\s*\)", src_sym)
+            if mw:                                # GTE of a while result
+                tup = symbols.get(mw.group(1), "")
+                mt = re.search(r"tuple\((.*)\)", tup)
+                if mt:
+                    parts = [p.strip().lstrip("%")
+                             for p in mt.group(1).split(",")]
+                    if idx < len(parts):
+                        cur = parts[idx]
+                        continue
+            break
+        break
+    dm = _SHAPE_RE.search(symbols.get(cur, ""))
+    return _DTYPE_BYTES[dm.group(1)] if dm else None
+
+
+def _dot_stats(rhs: str, symbols: dict, body_env: dict | None = None,
+               comp_name: str = ""):
+    """(flops, bytes) for one dot instruction rhs."""
+    out = _first_shape(rhs)
+    if out is None:
+        return 0.0, 0.0
+    _, out_elems, out_bytes = out
+    m = re.search(r"\bdot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", rhs)
+    k = 1
+    op_bytes = 0
+    if m:
+        for gi, side in ((1, "lhs"), (2, "rhs")):
+            sym = symbols.get(m.group(gi), "")
+            shape = _first_shape(sym)
+            if not shape:
+                continue
+            dims, elems, nominal_bytes = shape
+            src = _source_dtype_bytes(m.group(gi), symbols, body_env or {},
+                                      comp_name)
+            op_bytes += elems * src if src else nominal_bytes
+            if side == "lhs":
+                mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                if mc:
+                    for ci in (int(c) for c in mc.group(1).split(",") if c):
+                        if ci < len(dims):
+                            k *= dims[ci]
+    return 2.0 * out_elems * max(k, 1), float(op_bytes + out_bytes)
+
+
+def _while_trip_count(cond: Computation, symbols: dict) -> int:
+    """Trip count from the condition computation (compare vs constant)."""
+    for line in cond.lines:
+        m = re.search(r"compare\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)\s*\)",
+                      line)
+        if m and ("direction=LT" in line or "direction=GT" in line):
+            for operand in (m.group(2), m.group(1)):
+                sym = symbols.get(operand, "")
+                mm = re.search(r"constant\((\d+)\)", sym)
+                if mm:
+                    return max(1, int(mm.group(1)))
+    best = 1
+    for line in cond.lines:
+        mm = re.search(r"s32\[\]\s+constant\((\d+)\)", line)
+        if mm:
+            best = max(best, int(mm.group(1)))
+    return best
+
+
+def analyze(hlo: str) -> dict:
+    """Trip-count-corrected per-device flops / bytes / collectives."""
+    comps, symbols = split_computations(hlo)
+
+    # map while-loop body computations to their init tuple element names so
+    # loop-invariant operand dtypes resolve through the loop plumbing
+    body_env: dict[str, list] = {}
+    for c in comps.values():
+        for line in c.lines:
+            im = _INSTR_RE.match(line)
+            if not im or " while(" not in im.group(2):
+                continue
+            rhs = im.group(2)
+            mbody = re.search(r"body=%?([\w.\-]+)", rhs)
+            mop = re.search(r"while\(\s*%?([\w.\-]+)\s*\)", rhs)
+            if mbody and mop:
+                tup = symbols.get(mop.group(1), "")
+                mt = re.search(r"tuple\((.*)\)", tup)
+                if mt:
+                    body_env[mbody.group(1)] = [
+                        p.strip().lstrip("%") for p in mt.group(1).split(",")]
+
+    for c in comps.values():
+        for line in c.lines:
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            rhs = im.group(2)
+            if re.search(r"\bdot\(", rhs):
+                f, b = _dot_stats(rhs, symbols, body_env, c.name)
+                c.flops += f
+                c.dot_bytes += b
+            for kind in _COLLECTIVES:
+                if re.search(rf"\b{kind}(?:-start)?\(", rhs):
+                    if re.search(rf"\b{kind}-done\(", rhs):
+                        continue
+                    sh = _first_shape(rhs)
+                    c.coll_bytes[kind] += sh[2] if sh else 0
+                    c.coll_ops += 1
+            # call edges
+            mcond = re.search(r"condition=%?([\w.\-]+)", rhs)
+            mbody = re.search(r"body=%?([\w.\-]+)", rhs)
+            if " while(" in rhs and mbody:
+                trips = (_while_trip_count(comps[mcond.group(1)], symbols)
+                         if mcond and mcond.group(1) in comps else 1)
+                c.calls.append((trips, mbody.group(1)))
+                continue
+            for mcall in re.finditer(
+                    r"(?:calls|to_apply|branch_computations)="
+                    r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?", rhs):
+                for callee in re.split(r",\s*%?", mcall.group(1)):
+                    if callee in comps:
+                        c.calls.append((1, callee))
+
+    memo: dict[str, dict] = {}
+
+    def total(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        c = comps[name]
+        agg = {"flops": c.flops, "dot_bytes": c.dot_bytes,
+               "coll_ops": c.coll_ops, "coll": dict(c.coll_bytes)}
+        if depth < 50:
+            for mult, callee in c.calls:
+                if callee == name or callee not in comps:
+                    continue
+                sub = total(callee, depth + 1)
+                agg["flops"] += mult * sub["flops"]
+                agg["dot_bytes"] += mult * sub["dot_bytes"]
+                agg["coll_ops"] += mult * sub["coll_ops"]
+                for k in _COLLECTIVES:
+                    agg["coll"][k] += mult * sub["coll"][k]
+        memo[name] = agg
+        return agg
+
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None:
+        entry = next(iter(comps))
+    res = total(entry)
+    res["collective_bytes"] = sum(res["coll"].values())
+    res["entry"] = entry
+    res["n_computations"] = len(comps)
+    return res

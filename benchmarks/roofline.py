@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Roofline analysis per (arch x shape) on the single-pod production mesh.
+
+For each cell the compiled dry-run artifact yields per-device:
+  * HLO_FLOPs        — trip-count-corrected dot FLOPs (hlo_analysis walker;
+                       XLA's cost_analysis counts while bodies once and is
+                       reported alongside as a cross-check);
+  * HLO_bytes        — dot operand/result bytes (HBM-traffic proxy: XLA
+                       fuses elementwise chains into dot producers/consumers);
+  * collective_bytes — output bytes of all collective ops, loop-scaled.
+
+Terms (TPU v5e): compute = FLOPs / 197e12, memory = bytes / 819e9,
+collective = coll_bytes / 50e9 (per-chip ICI).  The roofline fraction is
+useful model FLOPs per chip / (peak * dominant term) — the score to push
+toward 1.0.
+
+    PYTHONPATH=src:. python -m benchmarks.roofline --all
+    PYTHONPATH=src:. python -m benchmarks.roofline --arch gemma-2b --shape train_4k
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link per chip
+
+
+def model_flops_global(cfg, shape) -> float:
+    """Useful model FLOPs per step: 6*N_active*tokens train, 2*N*tokens
+    inference (+ the causal-attention term)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n_active * tokens
+        attn_mult = 3.0  # fwd + bwd(2x) for attention scores/values
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2.0 * n_active * tokens
+        attn_mult = 1.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        base = 2.0 * n_active * tokens
+        attn_mult = 1.0
+    # causal attention flops (dense/moe/vlm/encdec attention layers)
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        h, hd, s = cfg.n_heads, cfg.head_dim, shape.seq_len
+        if shape.kind == "decode":
+            per_layer = 4.0 * shape.global_batch * s * h * hd
+        else:
+            per_layer = 2.0 * shape.global_batch * s * s * h * hd  # causal half x2 einsums
+        layers = cfg.n_layers + (cfg.n_enc_layers if cfg.family == "encdec" else 0)
+        base += attn_mult * layers * per_layer
+    return base
+
+
+def bytes_floor_per_dev(cfg, shape, cell, dp=16, tp=16) -> float:
+    """Minimal HBM traffic per device per step (perfect fusion/reuse):
+    weights streamed once per use, activations round-tripping HBM once per
+    layer, the KV cache (decode), and logits."""
+    params_local = cfg.param_count() * 2 / tp          # bf16 copy, TP-sharded
+    b_loc = max(1, shape.global_batch // dp)
+    layer_act = cfg.n_layers * b_loc * shape.seq_len * cfg.d_model * 2 * 2
+    logits = b_loc * shape.seq_len * cfg.vocab_size * 2 / tp
+    if shape.kind == "train":
+        # fwd + bwd(+remat) activation passes; f32 master/moment update
+        opt = cfg.param_count() * 4 * 4 / tp
+        return 2 * params_local + opt + 3 * layer_act + 2 * logits
+    if shape.kind == "prefill":
+        return params_local + layer_act + logits
+    # decode: weights (active experts only) + full cache read per token
+    act_local = cfg.active_param_count() * 2 / tp
+    kv = 0.0
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        kv = (2 * shape.global_batch * shape.seq_len * cfg.n_kv_heads
+              * cfg.head_dim * 2) * cfg.n_layers / (dp * tp)
+    return act_local + kv
+
+
+def coll_floor_per_dev(cfg, shape, prof, dp=16, tp=16) -> float:
+    """Minimal collective bytes per device per step, per parallelism plan."""
+    b_loc = max(1, shape.global_batch // dp)
+    if shape.kind == "train":
+        # DP gradient all-reduce: ring moves ~2x the (possibly compressed)
+        # gradient shard; with FSDP params the grads are already sharded.
+        gbytes = 2 if prof.grad_compression else 4
+        shard = cfg.param_count() * gbytes / (16 if prof.fsdp_params else 1)
+        floor = 2.0 * shard / (1 if prof.pure_dp_train else tp)
+        if not prof.pure_dp_train:
+            # Megatron TP: 2 activation ARs fwd + 2 bwd per layer (2x ring)
+            floor += cfg.n_layers * 4 * 2 * b_loc * shape.seq_len * cfg.d_model * 2
+            if cfg.n_experts:
+                # EP: fwd+bwd all-to-all of the slot buffer + its TP psums
+                slots = (b_loc * shape.seq_len * cfg.top_k
+                         * cfg.capacity_factor)
+                n_moe = sum(cfg.is_moe_layer)
+                floor += n_moe * slots * cfg.d_model * 2 * (2 + 4 * 2)
+        return floor
+    # inference: TP activation reduce per layer ~ B*S_step*d per layer
+    tok = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    floor = 2.0 * cfg.n_layers * tok * cfg.d_model * 2 / dp
+    if cfg.n_experts:
+        slots = tok / dp * cfg.top_k * cfg.capacity_factor
+        floor += sum(cfg.is_moe_layer) * slots * cfg.d_model * 2 * 4
+    return floor
+
+
+def run_cell(arch, shape_name, mesh, out_dir: Path, verbose=True):
+    from benchmarks import hlo_analysis
+    from repro import configs
+    from repro.launch import specs as specs_lib
+
+    t0 = time.time()
+    cell = specs_lib.build_cell(arch, shape_name, mesh, multi_pod=False)
+    compiled = cell.lower().compile()
+    res = hlo_analysis.analyze(compiled.as_text())
+    ca = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+
+    chips = 256
+    shape = configs.SHAPES[shape_name]
+    prof = specs_lib.profile_for(arch)
+    t_compute = res["flops"] / PEAK_FLOPS
+    t_memory = res["dot_bytes"] / HBM_BW
+    t_coll = res["collective_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_global(cell.cfg, shape)
+    useful_t = mf / chips / PEAK_FLOPS
+    # per-term floors -> the roofline fraction is measured against the
+    # dominant term's own floor (MFU-style for compute-bound, bandwidth
+    # utilization for memory-bound, minimal-AR for collective-bound)
+    floors = {
+        "compute": useful_t,
+        "memory": bytes_floor_per_dev(cell.cfg, shape, cell) / HBM_BW,
+        "collective": coll_floor_per_dev(cell.cfg, shape, prof) / ICI_BW,
+    }
+    frac = floors[dominant] / max(terms[dominant], 1e-30)
+    ratio = (mf / chips) / max(res["flops"], 1.0)
+
+    row = {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        "hlo_flops_per_dev": res["flops"],
+        "hlo_dot_bytes_per_dev": res["dot_bytes"],
+        "collective_bytes_per_dev": res["collective_bytes"],
+        "coll_breakdown": res["coll"],
+        "coll_ops": res["coll_ops"],
+        "xla_cost_flops_scan_once": ca.get("flops", 0.0),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_global": mf,
+        "useful_ratio": ratio,
+        "roofline_fraction": frac,
+        "floors_s": floors,
+        "peak_bytes_per_dev": (getattr(mem, "argument_size_in_bytes", 0)
+                               + getattr(mem, "temp_size_in_bytes", 0)),
+        "compile_s": round(time.time() - t0, 1),
+    }
+    if verbose:
+        print(f"{arch:28s} {shape_name:12s} comp {t_compute*1e3:8.3f}ms "
+              f"mem {t_memory*1e3:8.3f}ms coll {t_coll*1e3:8.3f}ms "
+              f"-> {dominant:10s} frac {frac*100:5.1f}% "
+              f"useful {ratio*100:5.1f}%", flush=True)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape_name}.json").write_text(
+        json.dumps(row, indent=1))
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args(argv)
+
+    from repro import configs
+    from repro.launch.mesh import make_production_mesh
+
+    if args.all:
+        cells = configs.grid()
+    else:
+        shapes = [args.shape] if args.shape else configs.shapes_for(args.arch)
+        cells = [(args.arch, s) for s in shapes]
+
+    mesh = make_production_mesh(multi_pod=False)
+    rows = []
+    for arch, shape in cells:
+        try:
+            rows.append(run_cell(arch, shape, mesh, Path(args.out)))
+        except Exception as e:  # noqa: BLE001
+            print(f"FAIL {arch} {shape}: {e!r}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only fig15
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark function names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import bench_kernels, bench_paper
+
+    benches = list(bench_paper.ALL) + list(bench_kernels.ALL)
+    if args.only:
+        benches = [b for b in benches if args.only in b.__name__]
+        if not benches:
+            print(f"no benchmark matches {args.only!r}", file=sys.stderr)
+            return 1
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        t0 = time.time()
+        try:
+            for line in bench():
+                print(line, flush=True)
+        except AssertionError as e:
+            failures += 1
+            print(f"{bench.__name__},,FAILED_ASSERT:{e}", flush=True)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures += 1
+            print(f"{bench.__name__},,ERROR:{type(e).__name__}:{e}",
+                  flush=True)
+        dt = time.time() - t0
+        print(f"# {bench.__name__} done in {dt:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

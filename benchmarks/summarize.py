@@ -1,0 +1,41 @@
+"""Render the roofline JSON directory as the EXPERIMENTS.md markdown table.
+
+    PYTHONPATH=src:. python -m benchmarks.summarize [--dir experiments/roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def fmt_ms(s: float) -> str:
+    ms = s * 1e3
+    return f"{ms:.3f}ms" if ms < 1 else f"{ms:.0f}ms"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/roofline")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for f in sorted(Path(args.dir).glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    print("| arch | shape | compute | memory | collective | dominant "
+          "| frac | useful |")
+    print("|---|---|---:|---:|---:|---|---:|---:|")
+    for r in rows:
+        frac = min(r["roofline_fraction"], 1.0)
+        useful = min(r["useful_ratio"], 1.3)
+        print(f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute_s'])} "
+              f"| {fmt_ms(r['t_memory_s'])} | {fmt_ms(r['t_collective_s'])} "
+              f"| {r['dominant']} | {frac*100:.0f}% | {useful*100:.0f}% |")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+"""Serve a small LM: prefill + batched KV-cache decode with latency stats.
+
+The same step functions are what the multi-pod dry-run lowers at full scale
+(decode_32k / long_500k cells).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-1.2b]
+"""
+
+import argparse
+
+from repro.launch import serve as serve_cli
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="granite-3-2b")
+ap.add_argument("--gen", type=int, default=24)
+args = ap.parse_args()
+
+for arch in dict.fromkeys([args.arch, "mamba2-780m"]):
+    print(f"\n=== serving {arch} (reduced) ===")
+    serve_cli.main(["--arch", arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "32", "--gen", str(args.gen)])
+print("\nserve_lm example OK")

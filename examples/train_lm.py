@@ -1,0 +1,38 @@
+"""Train a small LM end to end with the full production substrate.
+
+Uses the same driver the cluster runs (repro.launch.train): deterministic
+resumable data stream, AdamW, async checkpointing, straggler monitor —
+demonstrating checkpoint/restart mid-run.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--arch granite-3-2b]
+      (reduced config; a few hundred steps on CPU)
+"""
+
+import argparse
+import shutil
+import tempfile
+
+from repro.launch import train as train_cli
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="tinyllama-1.1b")
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--fast", action="store_true")
+args = ap.parse_args()
+
+steps = 60 if args.fast else args.steps
+ckpt = tempfile.mkdtemp(prefix="repro_lm_")
+try:
+    print(f"=== phase 1: train to step {steps//2}, checkpointing ===")
+    train_cli.main(["--arch", args.arch, "--reduced",
+                    "--steps", str(steps // 2), "--batch", "8",
+                    "--seq", "128", "--ckpt-dir", ckpt,
+                    "--ckpt-every", "20"])
+    print("\n=== phase 2: 'crash' + resume from checkpoint ===")
+    train_cli.main(["--arch", args.arch, "--reduced",
+                    "--steps", str(steps), "--batch", "8",
+                    "--seq", "128", "--ckpt-dir", ckpt, "--resume",
+                    "--ckpt-every", "20"])
+finally:
+    shutil.rmtree(ckpt, ignore_errors=True)
+print("\ntrain_lm example OK")

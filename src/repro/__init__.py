@@ -1,0 +1,3 @@
+"""repro: RF analog processor (RFNN) reproduction + multi-pod JAX framework."""
+
+__version__ = "1.0.0"

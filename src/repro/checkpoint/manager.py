@@ -1,0 +1,152 @@
+"""Checkpoint manager: atomic, shard-per-host, async, with retention.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000100/
+        manifest.json          # tree structure, shapes/dtypes, data step
+        host_000.npz           # this host's param/opt shards (zstd)
+        ...
+      LATEST                   # atomically updated pointer file
+
+Fault-tolerance properties:
+  * writes go to ``step_x.tmp`` then ``os.replace`` -> crash mid-save never
+    corrupts a restorable checkpoint;
+  * the LATEST pointer is written last, after all hosts' shards (multi-host
+    barrier is the caller's collective; here each host owns its file);
+  * ``save_async`` runs serialization on a worker thread so the train loop
+    keeps stepping (the pytree is snapshotted to host memory first);
+  * ``restore`` validates the manifest tree against the expected structure
+    and resumes the deterministic data stream at ``data_step``;
+  * ``keep`` retention deletes old steps only after a newer one is durable.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+import zstandard
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 host_id: int = 0, num_hosts: int = 1):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self._worker: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def save(self, step: int, tree, *, data_step: int | None = None):
+        """Synchronous durable save of this host's shards."""
+        self.wait()  # serialize against any in-flight async save
+        host_tree = jax.tree.map(np.asarray, tree)  # device -> host
+        self._write(step, host_tree, data_step if data_step is not None else step)
+
+    def save_async(self, step: int, tree, *, data_step: int | None = None):
+        """Snapshot to host memory now; serialize on a worker thread."""
+        self.wait()  # one outstanding save at a time
+        host_tree = jax.tree.map(np.asarray, tree)
+        ds = data_step if data_step is not None else step
+        self._worker = threading.Thread(
+            target=self._write, args=(step, host_tree, ds), daemon=True)
+        self._worker.start()
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def _write(self, step: int, host_tree, data_step: int):
+        final = self._step_dir(step)
+        if final.exists():
+            return  # this step is already durable
+        tmp = final.with_suffix(".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+
+        leaves = _flatten_with_paths(host_tree)
+        buf = io.BytesIO()
+        np.savez(buf, **{f"leaf_{i}": np.asarray(v)
+                         for i, (_, v) in enumerate(leaves)})
+        payload = zstandard.ZstdCompressor(level=3).compress(buf.getvalue())
+        (tmp / f"host_{self.host_id:03d}.zst").write_bytes(payload)
+
+        if self.host_id == 0:
+            manifest = {
+                "step": step,
+                "data_step": data_step,
+                "num_hosts": self.num_hosts,
+                "paths": [p for p, _ in leaves],
+                "shapes": [list(np.shape(v)) for _, v in leaves],
+                "dtypes": [str(np.asarray(v).dtype) for _, v in leaves],
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+
+        os.replace(tmp, final)  # atomic publish
+        if self.host_id == 0:
+            latest_tmp = self.dir / "LATEST.tmp"
+            latest_tmp.write_text(str(step))
+            os.replace(latest_tmp, self.dir / "LATEST")
+            self._apply_retention(step)
+
+    def _apply_retention(self, newest_step: int):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            if s != newest_step:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                      if p.is_dir() and not p.suffix)
+
+    def latest_step(self) -> int | None:
+        ptr = self.dir / "LATEST"
+        if ptr.exists():
+            s = int(ptr.read_text())
+            if self._step_dir(s).exists():
+                return s
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None, like):
+        """Restore into the structure of ``like``; returns (tree, meta)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        raw = zstandard.ZstdDecompressor().decompress(
+            (d / f"host_{self.host_id:03d}.zst").read_bytes())
+        data = np.load(io.BytesIO(raw))
+        leaves = [data[f"leaf_{i}"] for i in range(len(manifest["paths"]))]
+
+        expected = [p for p, _ in _flatten_with_paths(like)]
+        if expected != manifest["paths"]:
+            raise ValueError(
+                "checkpoint tree mismatch:\n"
+                f"  have {manifest['paths'][:4]}...\n  want {expected[:4]}...")
+        treedef = jax.tree.structure(like)
+        tree = jax.tree.unflatten(treedef, leaves)
+        return tree, {"step": manifest["step"],
+                      "data_step": manifest["data_step"]}

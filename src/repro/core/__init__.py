@@ -1,0 +1,39 @@
+"""Core library: the paper's RF analog processor as composable JAX modules."""
+
+from repro.core.cell import (
+    TABLE_I_PHASES_DEG,
+    TABLE_I_PHASES_RAD,
+    cell_matrix,
+    output_powers,
+    output_voltages,
+    s_parameters,
+)
+from repro.core.mesh import (
+    MeshPlan,
+    apply_mesh,
+    clements_plan,
+    init_mesh_params,
+    mesh_matrix,
+    pack_cells_to_columns,
+)
+from repro.core.decompose import fit_program, random_unitary, reck_program
+from repro.core.svd_synthesis import SynthesizedMatrix, synthesize
+from repro.core.quantize import (
+    ste_quantize,
+    table_i_codebook,
+    uniform_codebook,
+)
+from repro.core.hardware import IDEAL, HardwareModel, apply_mesh_hw, detect_magnitude
+from repro.core.analog_linear import AnalogLinear, AnalogUnitary, TiledAnalogLinear
+from repro.core.activations import abs_detect, get_activation
+
+__all__ = [
+    "TABLE_I_PHASES_DEG", "TABLE_I_PHASES_RAD", "cell_matrix", "output_powers",
+    "output_voltages", "s_parameters", "MeshPlan", "apply_mesh",
+    "clements_plan", "init_mesh_params", "mesh_matrix", "pack_cells_to_columns",
+    "fit_program", "random_unitary", "reck_program", "SynthesizedMatrix",
+    "synthesize", "ste_quantize", "table_i_codebook", "uniform_codebook",
+    "IDEAL", "HardwareModel", "apply_mesh_hw", "detect_magnitude",
+    "AnalogLinear", "AnalogUnitary", "TiledAnalogLinear", "abs_detect",
+    "get_activation",
+]

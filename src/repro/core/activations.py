@@ -1,0 +1,48 @@
+"""Activation functions used by the paper's networks (Sec. IV).
+
+The analog layer's activation is magnitude detection (``abs``) — it is what
+the power detector physically measures.  All other activations run in digital
+post-processing, exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def abs_detect(x: jax.Array) -> jax.Array:
+    """Magnitude detection — the analog layer's natural activation."""
+    return jnp.abs(x)
+
+
+def sigmoid(x: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(x)
+
+
+def leaky_relu(x: jax.Array, slope: float = 0.01) -> jax.Array:
+    return jax.nn.leaky_relu(x, slope)
+
+
+def softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(x, axis=axis)
+
+
+ACTIVATIONS = {
+    "abs": abs_detect,
+    "sigmoid": sigmoid,
+    "leaky_relu": leaky_relu,
+    "softmax": softmax,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "identity": lambda x: x,
+}
+
+
+def get_activation(name: str):
+    try:
+        return ACTIVATIONS[name]
+    except KeyError as e:
+        raise KeyError(f"unknown activation {name!r}; have {sorted(ACTIVATIONS)}") from e

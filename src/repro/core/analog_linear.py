@@ -1,0 +1,255 @@
+"""Trainable analog linear layers backed by the RF processor (paper Sec. IV).
+
+Three composable modules, all ``init(key) -> params`` / ``apply(params, x)``:
+
+* :class:`AnalogUnitary` — an N x N mesh whose phases are trained directly
+  (the paper's MNIST hidden layer: an 8x8 mesh of 28 cells, Fig. 14).
+* :class:`AnalogLinear` — an arbitrary (out x in) matrix in SVD form
+  V-mesh -> attenuation -> U-mesh with a digital scale gamma (Eq. 31 +
+  Fig. 11 pre/post scaling).  Trainable, or programmed from a target matrix.
+* :class:`TiledAnalogLinear` — a grid of tile-sized AnalogLinear cores
+  implementing a large matmul as block sums; the scale-out path for LM-sized
+  projections (Sec. V discusses 20x20 passive arrays).
+
+Each supports Table-I discrete-phase quantization (straight-through
+gradients) and the hardware-imperfection model, so "analog" training can be
+made exactly as faithful as the prototype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hardware as hw_lib
+from repro.core import mesh as mesh_lib
+from repro.core import quantize as q_lib
+from repro.core import svd_synthesis
+
+Array = jax.Array
+OutputMode = Literal["abs", "real", "complex"]
+
+
+def _as_complex(x: Array) -> Array:
+    if jnp.iscomplexobj(x):
+        return x.astype(jnp.complex64)
+    return x.astype(jnp.float32).astype(jnp.complex64)
+
+
+def _readout(y: Array, output: OutputMode, hw: hw_lib.HardwareModel | None,
+             key: Array | None) -> Array:
+    if output == "complex":
+        return y
+    if output == "abs":
+        if hw is not None:
+            return hw_lib.detect_magnitude(y, hw, key)
+        return jnp.abs(y)
+    return jnp.real(y)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogUnitary:
+    """N x N unitary mesh layer with directly trained phases."""
+
+    n: int
+    quantize: str | None = None      # None | "table1" | "uniform<bits>"
+    hardware: hw_lib.HardwareModel | None = None
+    output: OutputMode = "complex"
+
+    def __post_init__(self):
+        object.__setattr__(self, "_plan", mesh_lib.clements_plan(self.n))
+
+    @property
+    def plan(self) -> mesh_lib.MeshPlan:
+        return self._plan  # type: ignore[attr-defined]
+
+    def codebook(self) -> Array | None:
+        if self.quantize is None:
+            return None
+        if self.quantize == "table1":
+            return q_lib.table_i_codebook()
+        if self.quantize.startswith("uniform"):
+            return q_lib.uniform_codebook(int(self.quantize[len("uniform"):]))
+        raise ValueError(f"unknown quantize mode {self.quantize!r}")
+
+    def init(self, key: Array) -> dict:
+        return mesh_lib.init_mesh_params(key, self.plan, with_sigma=True)
+
+    def effective_params(self, params: dict) -> dict:
+        cb = self.codebook()
+        if cb is None:
+            return params
+        return q_lib.quantize_mesh_params(params, cb, ste=True)
+
+    def apply(self, params: dict, x: Array, *, key: Array | None = None) -> Array:
+        p = self.effective_params(params)
+        xc = _as_complex(x)
+        if self.hardware is not None:
+            kmesh, kdet = (jax.random.split(key) if key is not None else (None, None))
+            y = hw_lib.apply_mesh_hw(self.plan, p, xc, self.hardware, kmesh)
+            return _readout(y, self.output, self.hardware, kdet)
+        y = mesh_lib.apply_mesh(self.plan, p, xc)
+        return _readout(y, self.output, None, None)
+
+    def matrix(self, params: dict) -> Array:
+        return mesh_lib.mesh_matrix(self.plan, self.effective_params(params))
+
+    def n_cells(self) -> int:
+        return self.plan.n_cells
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogLinear:
+    """Arbitrary (out x in) analog matrix in SVD mesh form."""
+
+    in_dim: int
+    out_dim: int
+    quantize: str | None = None
+    hardware: hw_lib.HardwareModel | None = None
+    output: OutputMode = "real"
+
+    def __post_init__(self):
+        n = max(self.in_dim, self.out_dim)
+        n += n % 2
+        object.__setattr__(self, "n", n)
+        plan = mesh_lib.clements_plan(n)
+        object.__setattr__(self, "_u_plan", plan)
+        object.__setattr__(self, "_v_plan", plan)
+
+    @property
+    def u_plan(self) -> mesh_lib.MeshPlan:
+        return self._u_plan  # type: ignore[attr-defined]
+
+    @property
+    def v_plan(self) -> mesh_lib.MeshPlan:
+        return self._v_plan  # type: ignore[attr-defined]
+
+    def init(self, key: Array) -> dict:
+        ku, kv, ka, kg = jax.random.split(key, 4)
+        n = self.n
+        return {
+            "u": mesh_lib.init_mesh_params(ku, self.u_plan, with_sigma=True),
+            "v": mesh_lib.init_mesh_params(kv, self.v_plan, with_sigma=True),
+            # attenuation in [0,1] via sigmoid of a free logit
+            "atten_logit": jax.random.normal(ka, (n,)) * 0.5 + 1.0,
+            # digital scale gamma, softplus-positive; init near Glorot scale
+            "log_scale": jnp.full((), np.log(np.expm1(
+                float(np.sqrt(2.0 / (self.in_dim + self.out_dim)) * np.sqrt(self.in_dim))))),
+        }
+
+    def _quant(self, mp: dict) -> dict:
+        cb = AnalogUnitary.codebook(self)  # type: ignore[arg-type]
+        if cb is None:
+            return mp
+        return q_lib.quantize_mesh_params(mp, cb, ste=True)
+
+    def apply(self, params: dict, x: Array, *, key: Array | None = None) -> Array:
+        xc = _as_complex(x)
+        pad = self.n - x.shape[-1]
+        if pad:
+            xc = jnp.concatenate(
+                [xc, jnp.zeros(xc.shape[:-1] + (pad,), xc.dtype)], axis=-1)
+        u_p, v_p = self._quant(params["u"]), self._quant(params["v"])
+        atten = jax.nn.sigmoid(params["atten_logit"]).astype(jnp.complex64)
+        scale = jax.nn.softplus(params["log_scale"])
+        if self.hardware is not None:
+            kv, ku, kd = (jax.random.split(key, 3) if key is not None
+                          else (None, None, None))
+            h = hw_lib.apply_mesh_hw(self.v_plan, v_p, xc, self.hardware, kv)
+            h = h * atten
+            y = hw_lib.apply_mesh_hw(self.u_plan, u_p, h, self.hardware, ku)
+            y = scale * y[..., : self.out_dim]
+            return _readout(y, self.output, self.hardware, kd)
+        h = mesh_lib.apply_mesh(self.v_plan, v_p, xc)
+        h = h * atten
+        y = mesh_lib.apply_mesh(self.u_plan, u_p, h)
+        y = scale * y[..., : self.out_dim]
+        return _readout(y, self.output, None, None)
+
+    def init_from_matrix(self, m: np.ndarray) -> dict:
+        """Program the layer to realize a given matrix (analytic SVD path)."""
+        syn = svd_synthesis.synthesize(m)
+        if syn.n != self.n:
+            raise ValueError(f"matrix pad size {syn.n} != layer size {self.n}")
+        atten = np.clip(np.asarray(syn.attenuation), 1e-6, 1 - 1e-6)
+        # The analytic program lives on reck plans; adopt them (device
+        # reprogramming changes the physical layout, not the API).
+        params = {
+            "u": dict(syn.u_params),
+            "v": dict(syn.v_params),
+            "atten_logit": jnp.asarray(np.log(atten / (1 - atten)), jnp.float32),
+            "log_scale": jnp.asarray(np.log(np.expm1(syn.scale)), jnp.float32),
+        }
+        object.__setattr__(self, "_u_plan", syn.u_plan)
+        object.__setattr__(self, "_v_plan", syn.v_plan)
+        return params
+
+    def n_cells(self) -> int:
+        return self.u_plan.n_cells + self.v_plan.n_cells
+
+
+@dataclasses.dataclass(frozen=True)
+class TiledAnalogLinear:
+    """A large (out x in) matmul as a grid of analog tile processors.
+
+    The weight is a (To x Ti) grid of tile_size^2 analog SVD cores; tile
+    row outputs are combined coherently (power combiner after matched lines)
+    and the readout mode applies after combination.
+    """
+
+    in_dim: int
+    out_dim: int
+    tile_size: int = 16
+    quantize: str | None = None
+    hardware: hw_lib.HardwareModel | None = None
+    output: OutputMode = "real"
+
+    def __post_init__(self):
+        t = self.tile_size
+        if t % 2:
+            raise ValueError("tile_size must be even")
+        if self.in_dim % t or self.out_dim % t:
+            raise ValueError(
+                f"dims ({self.out_dim},{self.in_dim}) must be multiples of tile {t}")
+        object.__setattr__(self, "_tile", AnalogLinear(
+            in_dim=t, out_dim=t, quantize=self.quantize, hardware=None,
+            output="complex"))
+
+    @property
+    def tile(self) -> AnalogLinear:
+        return self._tile  # type: ignore[attr-defined]
+
+    def grid(self) -> tuple[int, int]:
+        return (self.out_dim // self.tile_size, self.in_dim // self.tile_size)
+
+    def init(self, key: Array) -> dict:
+        to, ti = self.grid()
+        keys = jax.random.split(key, to * ti).reshape(to, ti, 2)
+        return jax.vmap(jax.vmap(self.tile.init))(keys)
+
+    def apply(self, params: dict, x: Array, *, key: Array | None = None) -> Array:
+        to, ti = self.grid()
+        t = self.tile_size
+        xt = x.reshape(x.shape[:-1] + (ti, t))  # [..., Ti, t]
+
+        def one_tile(p, xin):
+            return self.tile.apply(p, xin)
+
+        # vmap over the input-tile axis, then the output-tile axis.
+        def row(prow):
+            ys = jax.vmap(one_tile, in_axes=(0, -2), out_axes=-2)(prow, xt)
+            return jnp.sum(ys, axis=-2)  # coherent combine over input tiles
+
+        y = jax.vmap(row, in_axes=0, out_axes=-2)(params)  # [..., To, t]
+        y = y.reshape(y.shape[:-2] + (self.out_dim,))
+        if self.hardware is not None and self.output == "abs":
+            return hw_lib.detect_magnitude(y, self.hardware, key)
+        return _readout(y, self.output, None, None)
+
+    def n_cells(self) -> int:
+        to, ti = self.grid()
+        return to * ti * self.tile.n_cells()

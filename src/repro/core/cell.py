@@ -1,0 +1,141 @@
+"""The 2x2 reconfigurable linear RF analog processor unit cell.
+
+Implements the physics of the paper's unit cell (Fig. 2): two quadrature
+(90 deg) hybrids and two phase shifters (theta between the hybrids on channel
+1, phi at the output of channel 1).  The forward voltage transfer matrix is
+paper Eq. (5):
+
+    t(theta, phi) = j e^{-j theta/2} [ e^{-j phi} sin(th/2)  e^{-j phi} cos(th/2) ]
+                                     [          cos(th/2)            -sin(th/2)  ]
+
+with t t^H = I (Eq. 18), i.e. an element of U(2).
+
+Everything here is pure JAX and differentiable w.r.t. (theta, phi); the
+hardware-imperfect variant lives in :mod:`repro.core.hardware`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Paper constants
+# ---------------------------------------------------------------------------
+
+#: Table I — discrete phase differences (degrees) of the six switched lines.
+TABLE_I_PHASES_DEG: tuple[float, ...] = (29.0, 53.0, 75.0, 104.0, 135.0, 154.0)
+
+#: Table I in radians, as a numpy array (used by the quantizer).
+TABLE_I_PHASES_RAD: np.ndarray = np.deg2rad(np.asarray(TABLE_I_PHASES_DEG))
+
+#: Design center frequency of the prototype (Hz).
+F0_HZ: float = 2.0e9
+
+#: Characteristic impedance of the transmission lines (ohm).
+Z0_OHM: float = 50.0
+
+#: Number of discrete states per phase shifter (SP6T switch pair).
+N_DISCRETE_STATES: int = 6
+
+
+# ---------------------------------------------------------------------------
+# Ideal quadrature hybrid and cell transfer
+# ---------------------------------------------------------------------------
+
+def quadrature_hybrid() -> jnp.ndarray:
+    """Forward 2x2 voltage block of an ideal 3-dB 90-degree hybrid.
+
+    From the 4-port S-matrix (paper Eq. 3/4), keeping the forward path
+    (P1, P4) -> (P2, P3):  (-1/sqrt(2)) [[j, 1], [1, j]].
+    """
+    return (-1.0 / jnp.sqrt(2.0)) * jnp.array([[1j, 1.0], [1.0, 1j]], dtype=jnp.complex64)
+
+
+def phase_shifter(phase: jnp.ndarray) -> jnp.ndarray:
+    """diag(e^{-j phase}, 1): a delay line on channel 1 (negative convention)."""
+    one = jnp.ones_like(phase)
+    e = jnp.exp(-1j * phase.astype(jnp.complex64))
+    return jnp.stack(
+        [jnp.stack([e, jnp.zeros_like(e)], axis=-1),
+         jnp.stack([jnp.zeros_like(e), one.astype(jnp.complex64)], axis=-1)],
+        axis=-2,
+    )
+
+
+def cell_matrix(theta: jnp.ndarray, phi: jnp.ndarray) -> jnp.ndarray:
+    """t(theta, phi), paper Eq. (5).  Broadcasts over leading dims.
+
+    Returns a complex64 array of shape ``theta.shape + (2, 2)``.
+    """
+    theta = jnp.asarray(theta, jnp.float32)
+    phi = jnp.asarray(phi, jnp.float32)
+    half = 0.5 * theta
+    s, c = jnp.sin(half), jnp.cos(half)
+    glob = 1j * jnp.exp(-0.5j * theta.astype(jnp.complex64))
+    ephi = jnp.exp(-1j * phi.astype(jnp.complex64))
+    row0 = jnp.stack([ephi * s, ephi * c], axis=-1)
+    row1 = jnp.stack([c + 0j, -s + 0j], axis=-1)
+    return glob[..., None, None] * jnp.stack([row0, row1], axis=-2)
+
+
+def cell_matrix_structural(theta: jnp.ndarray, phi: jnp.ndarray) -> jnp.ndarray:
+    """t(theta, phi) built structurally: Phi . H . Theta . H.
+
+    Identical to :func:`cell_matrix` (validated in tests); kept as the
+    physics-derivation form reused by the imperfect hardware model.
+    """
+    h = quadrature_hybrid()
+    return phase_shifter(phi) @ h @ phase_shifter(theta) @ h
+
+
+# ---------------------------------------------------------------------------
+# S-parameters and power transfer (paper Eqs. 6-17)
+# ---------------------------------------------------------------------------
+
+def s_parameters(theta: jnp.ndarray, phi: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """The four forward S-parameters of the cell, Eqs. (6)-(9)."""
+    t = cell_matrix(theta, phi)
+    return {"s21": t[..., 0, 0], "s24": t[..., 0, 1],
+            "s31": t[..., 1, 0], "s34": t[..., 1, 1]}
+
+
+def output_voltages(theta, phi, p1_w, p4_w, z0: float = Z0_OHM):
+    """Complex output voltage phasors at (P2, P3) for in-phase power feeds.
+
+    Paper Eqs. (10)-(13): V_nm = sqrt(2 Z0 P_m) S_nm, summed per port.
+    ``p1_w``/``p4_w`` are input powers in watts.
+    """
+    v1 = jnp.sqrt(2.0 * z0 * jnp.asarray(p1_w, jnp.float32)).astype(jnp.complex64)
+    v4 = jnp.sqrt(2.0 * z0 * jnp.asarray(p4_w, jnp.float32)).astype(jnp.complex64)
+    t = cell_matrix(theta, phi)
+    v2 = t[..., 0, 0] * v1 + t[..., 0, 1] * v4
+    v3 = t[..., 1, 0] * v1 + t[..., 1, 1] * v4
+    return v2, v3
+
+
+def output_powers(theta, phi, p1_w, p4_w, z0: float = Z0_OHM):
+    """Measured powers at (P2, P3), Eqs. (14)-(15)."""
+    v2, v3 = output_voltages(theta, phi, p1_w, p4_w, z0)
+    p2 = jnp.abs(v2) ** 2 / (2.0 * z0)
+    p3 = jnp.abs(v3) ** 2 / (2.0 * z0)
+    return p2, p3
+
+
+def output_powers_closed_form(theta, p1_w, p4_w):
+    """Closed-form Eqs. (16)-(17): P2=(P1+P4) sin^2(th/2+D), P3=(P1+P4) cos^2."""
+    p1 = jnp.asarray(p1_w, jnp.float32)
+    p4 = jnp.asarray(p4_w, jnp.float32)
+    tot = p1 + p4
+    delta = jnp.arccos(jnp.sqrt(p1 / jnp.maximum(tot, 1e-30)))
+    p2 = tot * jnp.sin(0.5 * theta + delta) ** 2
+    p3 = tot * jnp.cos(0.5 * theta + delta) ** 2
+    return p2, p3
+
+
+def is_unitary(t: jnp.ndarray, atol: float = 1e-5) -> jnp.ndarray:
+    """Check t t^H = I over the trailing (2, 2) axes."""
+    eye = jnp.eye(t.shape[-1], dtype=t.dtype)
+    prod = t @ jnp.conj(jnp.swapaxes(t, -1, -2))
+    return jnp.all(jnp.abs(prod - eye) < atol)

@@ -1,0 +1,157 @@
+"""Programming a mesh to realize a target unitary (paper Eqs. 27-30).
+
+Two programmers are provided:
+
+* :func:`reck_program` — exact analytic factorization.  For the paper's cell
+  convention (phase shifter phi on the *output* of channel 1, Eq. 5), left
+  multiplication by ``t^H`` embedded on an adjacent channel pair can null any
+  matrix element, which yields a QR-by-adjacent-Givens sweep:
+
+      t^H_K ... t^H_1 . U = D   =>   U = t_1 ... t_K . D
+
+  so the physical cascade applies the diagonal phase screen D at the *input*,
+  then cells in reverse nulling order.  (With this cell the exact
+  factorization's screen lands on the input side; the paper draws Sigma at
+  the output — both parameterize all of U(N), see DESIGN.md.)
+
+* :func:`fit_program` — stochastic/gradient programming of an arbitrary
+  layout (e.g. the paper-faithful Clements rectangle with *output* screen).
+  The paper itself programs meshes this way: "the phase value of each
+  processor can be calculated using stochastic optimization methods" (Sec.
+  IV-B).
+
+Both return parameters for :func:`repro.core.mesh.apply_mesh` and are
+validated by reconstruction tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mesh as mesh_lib
+from repro.core.cell import cell_matrix
+
+
+def random_unitary(n: int, seed: int = 0) -> np.ndarray:
+    """Haar-ish random unitary via QR of a complex Gaussian."""
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(n, n)) + 1j * rng.normal(size=(n, n))
+    q, r = np.linalg.qr(z)
+    return (q * (np.diag(r) / np.abs(np.diag(r)))).astype(np.complex128)
+
+
+def _cell_np(theta: float, phi: float) -> np.ndarray:
+    half = 0.5 * theta
+    s, c = np.sin(half), np.cos(half)
+    glob = 1j * np.exp(-0.5j * theta)
+    return glob * np.array(
+        [[np.exp(-1j * phi) * s, np.exp(-1j * phi) * c], [c, -s]], np.complex128
+    )
+
+
+def reck_program(u: np.ndarray, atol: float = 1e-8):
+    """Exact analytic mesh program realizing the unitary ``u``.
+
+    Returns ``(plan, params)`` such that
+    ``mesh_matrix(plan, params) ~= u`` with ``params`` containing
+    ``theta``/``phi`` [C, P] and the input screen ``alpha_in`` [n].
+    """
+    u = np.asarray(u, np.complex128)
+    n = u.shape[0]
+    if u.shape != (n, n) or n % 2:
+        raise ValueError(f"need even square unitary, got {u.shape}")
+    err = np.abs(u @ u.conj().T - np.eye(n)).max()
+    if err > 1e-6:
+        raise ValueError(f"input is not unitary (err={err:.2e})")
+
+    v = u.copy()
+    nulled: list[tuple[int, float, float]] = []  # t^H application order
+    for col in range(n - 1):
+        for q in range(n - 1, col, -1):
+            p = q - 1
+            vp, vq = v[p, col], v[q, col]
+            if abs(vq) < atol and abs(vp) < atol:
+                continue
+            theta = 2.0 * np.arctan2(abs(vp), abs(vq))
+            if abs(vp) > atol and abs(vq) > atol:
+                phi = float(np.angle(vq) - np.angle(vp))
+            else:
+                phi = 0.0
+            th = _cell_np(theta, phi).conj().T  # t^H
+            rows = np.stack([v[p, :], v[q, :]])
+            v[p, :], v[q, :] = th @ rows
+            nulled.append((p, theta, phi))
+    d = np.diag(v).copy()
+    if np.abs(np.abs(d) - 1.0).max() > 1e-6 or np.abs(v - np.diag(d)).max() > 1e-6:
+        raise AssertionError("nulling did not reach a diagonal — bug")
+
+    # Physical order: input screen D, then cells in reverse nulling order.
+    cells_physical = list(reversed(nulled))
+    plan, theta, phi = mesh_lib.pack_cells_to_columns(
+        n, cells_physical, pad_to_columns=max(1, 2 * n - 3))
+    alpha_in = jnp.asarray(-np.angle(d), jnp.float32)  # e^{-j a} = d
+    params = {"theta": theta, "phi": phi, "alpha_in": alpha_in}
+    return plan, params
+
+
+def reconstruction_error(plan, params, target: np.ndarray) -> float:
+    rec = np.asarray(mesh_lib.mesh_matrix(plan, params))
+    return float(np.abs(rec - target).max())
+
+
+def fit_program(
+    target: np.ndarray,
+    plan: mesh_lib.MeshPlan | None = None,
+    *,
+    steps: int = 3000,
+    lr: float = 0.05,
+    seed: int = 0,
+    with_sigma: bool = True,
+    with_input_screen: bool = True,
+):
+    """Gradient programming of ``target`` onto a mesh layout.
+
+    Uses Adam on (theta, phi, alpha, alpha_in) minimizing the Frobenius error
+    of the realized matrix — the paper's "stochastic optimization" programming
+    path.  NOTE (validated empirically, see DESIGN.md): because the paper's
+    cell has a single external phase (phi on the output of channel 1), the
+    rectangle with an *output-only* Sigma screen is not universal over U(N);
+    an input phase screen restores exact universality, so it is on by
+    default.  Returns ``(plan, params, final_error)``.
+    """
+    target = jnp.asarray(target, jnp.complex64)
+    n = target.shape[0]
+    if plan is None:
+        plan = mesh_lib.clements_plan(n)
+    params = mesh_lib.init_mesh_params(jax.random.PRNGKey(seed), plan, with_sigma=with_sigma)
+    if with_input_screen:
+        params["alpha_in"] = jnp.zeros((n,), jnp.float32)
+
+    def loss_fn(p):
+        rec = mesh_lib.mesh_matrix(plan, p)
+        return jnp.sum(jnp.abs(rec - target) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    m = jax.tree.map(jnp.zeros_like, params)
+    s = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(i, params, m, s):
+        loss, g = grad_fn(params)
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        s = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, s, g)
+        t = i + 1.0
+        def upd(p, mm, ss):
+            mh = mm / (1 - b1**t)
+            sh = ss / (1 - b2**t)
+            return p - lr * mh / (jnp.sqrt(sh) + eps)
+        return jax.tree.map(upd, params, m, s), m, s, loss
+
+    loss = jnp.inf
+    for i in range(steps):
+        params, m, s, loss = step(float(i), params, m, s)
+    err = reconstruction_error(plan, params, np.asarray(target))
+    return plan, params, err

@@ -1,0 +1,99 @@
+"""Discrete Simultaneous Perturbation Stochastic Approximation (DSPSA).
+
+The paper's Algorithm I optimizes the *device biasing states* — integer
+switch codes selecting one of the six Table-I lines per shifter — with DSPSA
+(Wang & Spall 2011, ref [44]) while digital parameters use SGD.  DSPSA needs
+only two loss evaluations per step regardless of dimension, which matches a
+physical device where each evaluation is one hardware measurement pass.
+
+State layout: a pytree of int32 code arrays plus a float "virtual" mirror
+(the algorithm's continuous iterate); the device always sees the rounded
+projection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class DSPSAConfig:
+    a: float = 0.6          # gain numerator
+    big_a: float = 10.0     # stability constant A
+    alpha: float = 0.602    # gain decay exponent (Spall's recommended value)
+    n_states: int = 6       # codebook size (Table I -> 6)
+
+
+@dataclasses.dataclass
+class DSPSAState:
+    virtual: dict           # float32 pytree, the continuous iterate
+    step: int = 0
+
+
+def init(codes) -> DSPSAState:
+    return DSPSAState(virtual=jax.tree.map(
+        lambda c: c.astype(jnp.float32), codes), step=0)
+
+
+def project(state: DSPSAState, cfg: DSPSAConfig):
+    """Integer device codes from the virtual iterate."""
+    return jax.tree.map(
+        lambda v: jnp.clip(jnp.round(v), 0, cfg.n_states - 1).astype(jnp.int32),
+        state.virtual)
+
+
+def step(key: Array, state: DSPSAState, loss_fn: Callable[[dict], Array],
+         cfg: DSPSAConfig) -> tuple[DSPSAState, Array]:
+    """One DSPSA update.  ``loss_fn`` maps integer codes -> scalar loss.
+
+    Uses the two-measurement form: with Bernoulli(+-1) perturbation Delta,
+    evaluate at pi(x) +- Delta where pi is the floor+1/2 lattice midpoint,
+    and g_hat = (y+ - y-)/2 * Delta (Delta_i^2 = 1).
+    """
+    leaves, treedef = jax.tree.flatten(state.virtual)
+    keys = jax.random.split(key, len(leaves))
+    deltas = [jax.random.rademacher(k, l.shape, jnp.float32)
+              for k, l in zip(keys, leaves)]
+    delta_tree = jax.tree.unflatten(treedef, deltas)
+
+    mid = jax.tree.map(lambda v: jnp.floor(v) + 0.5, state.virtual)
+
+    def codes_at(sign: float):
+        return jax.tree.map(
+            lambda m, d: jnp.clip(jnp.round(m + sign * 0.5 * d), 0,
+                                  cfg.n_states - 1).astype(jnp.int32),
+            mid, delta_tree)
+
+    y_plus = loss_fn(codes_at(+1.0))
+    y_minus = loss_fn(codes_at(-1.0))
+    gain = cfg.a / (state.step + 1 + cfg.big_a) ** cfg.alpha
+    diff = (y_plus - y_minus) / 2.0
+
+    new_virtual = jax.tree.map(
+        lambda v, d: jnp.clip(v - gain * diff * d, -0.49, cfg.n_states - 0.51),
+        state.virtual, delta_tree)
+    new_state = DSPSAState(virtual=new_virtual, step=state.step + 1)
+    return new_state, jnp.minimum(y_plus, y_minus)
+
+
+def minimize(key: Array, codes0, loss_fn, cfg: DSPSAConfig, steps: int):
+    """Run DSPSA for ``steps`` iterations; returns (best codes, history)."""
+    state = init(codes0)
+    best_codes = project(state, cfg)
+    best_loss = loss_fn(best_codes)
+    hist = [float(best_loss)]
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        state, _ = step(sub, state, loss_fn, cfg)
+        cand = project(state, cfg)
+        loss = loss_fn(cand)
+        hist.append(float(loss))
+        if loss < best_loss:
+            best_loss, best_codes = loss, cand
+    return best_codes, hist

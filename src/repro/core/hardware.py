@@ -1,0 +1,132 @@
+"""Hardware-imperfection model of the RF analog processor (paper Sec. III/V).
+
+Models the measured non-idealities the paper reports:
+
+* imperfect quadrature hybrids (amplitude imbalance + phase error) — Fig. 6
+  shows measured |S| peaks below the theoretical 1/sqrt(2) level;
+* insertion loss per cell — Sec. V quotes ~0.25 dB per wavelength of
+  microstrip with a ~1-wavelength unit cell;
+* phase-shifter deviation from the nominal Table I values;
+* power detection at the outputs: the detector reads |V| (the paper's
+  natural ``abs`` activation) with a sensitivity floor (~-60 dBm) and
+  additive measurement noise.
+
+The model composes structurally: Phi_err . H_err . Theta_err . H_err with a
+scalar loss factor, so it degrades exactly the quantities the paper measures
+(unitarity, peak |S|, classification accuracy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mesh as mesh_lib
+from repro.core.cell import Z0_OHM
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Imperfection parameters of one 2x2 cell and its readout chain."""
+
+    #: hybrid amplitude imbalance epsilon: through/coupled amplitude ratio
+    #: (1+eps)/(1-eps); 0 = ideal 3-dB split.
+    hybrid_imbalance: float = 0.03
+    #: hybrid quadrature phase error (radians) added to the 90-deg arm.
+    hybrid_phase_err: float = np.deg2rad(2.0)
+    #: insertion loss per cell (dB); Sec. V: ~0.25 dB/lambda, cell ~ 1 lambda.
+    cell_loss_db: float = 0.25
+    #: rms random deviation of each phase shifter from nominal (radians).
+    phase_sigma: float = np.deg2rad(1.5)
+    #: detector sensitivity floor (dBm) — readings below this are noise.
+    detector_floor_dbm: float = -60.0
+    #: relative rms detector noise on measured voltage magnitude.
+    detector_sigma: float = 0.01
+
+    @property
+    def cell_gain(self) -> float:
+        return float(10.0 ** (-self.cell_loss_db / 20.0))
+
+
+IDEAL = HardwareModel(hybrid_imbalance=0.0, hybrid_phase_err=0.0,
+                      cell_loss_db=0.0, phase_sigma=0.0,
+                      detector_floor_dbm=-300.0, detector_sigma=0.0)
+
+
+def imperfect_hybrid(hw: HardwareModel) -> Array:
+    """Forward block of a lossy, imbalanced quadrature hybrid."""
+    e = hw.hybrid_imbalance
+    thru = (1.0 + e) * jnp.exp(1j * hw.hybrid_phase_err) * 1j
+    coup = (1.0 - e) + 0j
+    m = jnp.array([[thru, coup], [coup, thru]], jnp.complex64)
+    # keep passive: renormalize worst-case row power to <= 1, then 3-dB split
+    scale = jnp.sqrt(jnp.max(jnp.sum(jnp.abs(m) ** 2, axis=1)))
+    return -m / scale
+
+
+def imperfect_cell_matrix(theta: Array, phi: Array, hw: HardwareModel,
+                          key: Array | None = None) -> Array:
+    """t(theta, phi) under the hardware model; broadcasts like cell_matrix."""
+    theta = jnp.asarray(theta, jnp.float32)
+    phi = jnp.asarray(phi, jnp.float32)
+    if key is not None and hw.phase_sigma > 0:
+        k1, k2 = jax.random.split(key)
+        theta = theta + hw.phase_sigma * jax.random.normal(k1, theta.shape)
+        phi = phi + hw.phase_sigma * jax.random.normal(k2, phi.shape)
+    h = imperfect_hybrid(hw)
+
+    def shifter(p):
+        e = jnp.exp(-1j * p.astype(jnp.complex64))
+        z = jnp.zeros_like(e)
+        o = jnp.ones_like(e)
+        return jnp.stack([jnp.stack([e, z], -1), jnp.stack([z, o + 0j], -1)], -2)
+
+    t = shifter(phi) @ h @ shifter(theta) @ h
+    return hw.cell_gain * t
+
+
+def apply_mesh_hw(plan: mesh_lib.MeshPlan, params: dict, x: Array,
+                  hw: HardwareModel, key: Array | None = None) -> Array:
+    """Propagate through the mesh with per-cell hardware imperfections."""
+    if x.shape[-1] != plan.n:
+        raise ValueError(f"expected trailing dim {plan.n}, got {x.shape}")
+    x = x.astype(jnp.complex64)
+    alpha_in = params.get("alpha_in")
+    if alpha_in is not None:
+        x = x * jnp.exp(-1j * alpha_in.astype(jnp.complex64))
+    t_all = imperfect_cell_matrix(params["theta"], params["phi"], hw, key)
+    eye = jnp.eye(2, dtype=t_all.dtype)
+    t_all = jnp.where(jnp.asarray(plan.active)[..., None, None], t_all, eye)
+
+    def step(carry, col):
+        t2, tp, sl, rl = col
+        return mesh_lib._apply_column(carry, t2, tp, sl, rl), None
+
+    cols = (t_all, jnp.asarray(plan.top), jnp.asarray(plan.slot),
+            jnp.asarray(plan.role))
+    x, _ = jax.lax.scan(step, x, cols)
+    alpha = params.get("alpha")
+    if alpha is not None:
+        x = x * jnp.exp(-1j * alpha.astype(jnp.complex64))
+    return x
+
+
+def detect_magnitude(v: Array, hw: HardwareModel, key: Array | None = None,
+                     z0: float = Z0_OHM) -> Array:
+    """Power-detector readout: measured |V| with floor and noise.
+
+    This is the paper's ``abs`` activation as the hardware actually provides
+    it (Sec. IV-A: "the absolute function is naturally applied").
+    """
+    mag = jnp.abs(v)
+    if key is not None and hw.detector_sigma > 0:
+        mag = mag * (1.0 + hw.detector_sigma * jax.random.normal(key, mag.shape))
+    # sensitivity floor: power below floor reads as the floor's voltage.
+    floor_w = 10.0 ** (hw.detector_floor_dbm / 10.0) * 1e-3
+    v_floor = jnp.sqrt(2.0 * z0 * floor_w)
+    return jnp.maximum(mag, v_floor)

@@ -1,0 +1,232 @@
+"""N-channel meshes of 2x2 RF analog processor cells (paper Sec. IV-B, Fig. 13).
+
+A mesh is a sequence of *columns*; each column applies a set of
+non-overlapping 2x2 cells to adjacent channel pairs ``(p, p+1)``.  An N x N
+unitary needs S = N(N-1)/2 cells (paper Eq. 28) plus a diagonal phase screen
+``Sigma(N)`` (Eq. 27).
+
+Two layouts are provided:
+
+* ``clements`` — rectangular, N columns alternating pair offsets 0/1, depth N.
+  This is the layout used when *training phases directly* (the paper's MNIST
+  network trains the 8x8 mesh parameters directly rather than synthesizing a
+  target matrix).
+* ``reck`` — triangular, depth 2N-3; produced by the analytic programmer in
+  :mod:`repro.core.decompose` when a *target* unitary must be realized.
+
+The forward apply is a ``lax.scan`` over columns.  Each column update is
+scatter-free: per-channel static role/slot maps select the new value from the
+rotated pair values, which keeps the HLO O(1) in N and maps cleanly onto the
+Pallas kernel in ``repro.kernels.givens_mesh`` (batch panel resident in VMEM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cell import cell_matrix
+
+Array = jax.Array
+
+_ROLE_NONE, _ROLE_TOP, _ROLE_BOT = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# Mesh plan (static layout metadata)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """Static layout of a cell mesh.
+
+    Attributes:
+      n: number of channels (even).
+      top: int32 [C, P] — top channel index of each pair slot per column.
+      active: bool [C, P] — whether the slot holds a real cell.
+      slot: int32 [C, n] — pair slot feeding each channel (0 when none).
+      role: int8 [C, n] — 0 untouched / 1 top of pair / 2 bottom of pair.
+    """
+
+    n: int
+    top: np.ndarray
+    active: np.ndarray
+    slot: np.ndarray
+    role: np.ndarray
+
+    @property
+    def n_columns(self) -> int:
+        return self.top.shape[0]
+
+    @property
+    def pairs_per_column(self) -> int:
+        return self.top.shape[1]
+
+    @property
+    def n_cells(self) -> int:
+        return int(self.active.sum())
+
+    def param_shape(self) -> tuple[int, int]:
+        """Shape of the theta/phi parameter arrays."""
+        return (self.n_columns, self.pairs_per_column)
+
+
+def _make_plan(n: int, top: np.ndarray, active: np.ndarray) -> MeshPlan:
+    """Derive the per-channel role/slot maps and build the plan."""
+    c, _ = top.shape
+    slot = np.zeros((c, n), np.int32)
+    role = np.zeros((c, n), np.int8)
+    for ci in range(c):
+        for si in range(top.shape[1]):
+            if not active[ci, si]:
+                continue
+            p = int(top[ci, si])
+            if p < 0 or p + 1 >= n:
+                raise ValueError(f"pair ({p},{p+1}) out of range for n={n}")
+            if role[ci, p] != _ROLE_NONE or role[ci, p + 1] != _ROLE_NONE:
+                raise ValueError(f"overlapping pairs in column {ci}")
+            slot[ci, p] = si
+            role[ci, p] = _ROLE_TOP
+            slot[ci, p + 1] = si
+            role[ci, p + 1] = _ROLE_BOT
+    return MeshPlan(n=n, top=top, active=active, slot=slot, role=role)
+
+
+def clements_plan(n: int) -> MeshPlan:
+    """Rectangular mesh: N columns, alternating offsets; N(N-1)/2 cells."""
+    if n < 2 or n % 2:
+        raise ValueError(f"mesh size must be even and >= 2, got {n}")
+    p = n // 2
+    top = np.zeros((n, p), np.int32)
+    active = np.zeros((n, p), bool)
+    for c in range(n):
+        off = c % 2
+        starts = np.arange(off, n - 1, 2)
+        top[c, : len(starts)] = starts
+        active[c, : len(starts)] = True
+    plan = _make_plan(n, top, active)
+    assert plan.n_cells == n * (n - 1) // 2
+    return plan
+
+
+def pack_cells_to_columns(n: int, cells: list[tuple[int, float, float]],
+                          pad_to_columns: int | None = None):
+    """Greedy list-schedule of an ordered cell sequence into mesh columns.
+
+    ``cells`` is a list of ``(p, theta, phi)`` applied in order (cell i acts
+    before cell j for i < j when they share a channel).  Returns
+    ``(MeshPlan, theta[C,P], phi[C,P])``.  ``pad_to_columns`` appends empty
+    columns for shape stability across programs of the same size.
+    """
+    if n % 2:
+        raise ValueError("mesh size must be even")
+    free = np.zeros(n, np.int64)  # earliest column each channel is free at
+    placed: list[list[tuple[int, float, float]]] = [[]]
+    for p, th, ph in cells:
+        col = int(max(free[p], free[p + 1]))
+        while len(placed) <= col:
+            placed.append([])
+        placed[col].append((p, th, ph))
+        free[p] = free[p + 1] = col + 1
+    n_cols = len(placed)
+    if pad_to_columns is not None:
+        if n_cols > pad_to_columns:
+            raise ValueError(f"packed {n_cols} columns > pad {pad_to_columns}")
+        n_cols = pad_to_columns
+    pmax = n // 2
+    top = np.zeros((n_cols, pmax), np.int32)
+    active = np.zeros((n_cols, pmax), bool)
+    theta = np.zeros((n_cols, pmax), np.float32)
+    phi = np.zeros((n_cols, pmax), np.float32)
+    for c, col_cells in enumerate(placed):
+        for k, (p, th, ph) in enumerate(sorted(col_cells)):
+            top[c, k] = p
+            active[c, k] = True
+            theta[c, k] = th
+            phi[c, k] = ph
+    return _make_plan(n, top, active), jnp.asarray(theta), jnp.asarray(phi)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_mesh_params(key: Array, plan: MeshPlan, *, with_sigma: bool = True):
+    """Random mesh parameters: dict of theta, phi [C, P] and alpha [n]."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    c, p = plan.param_shape()
+    params = {
+        "theta": jax.random.uniform(k1, (c, p), jnp.float32, 0.0, np.pi),
+        "phi": jax.random.uniform(k2, (c, p), jnp.float32, 0.0, 2 * np.pi),
+    }
+    if with_sigma:
+        params["alpha"] = jax.random.uniform(k3, (plan.n,), jnp.float32, 0.0, 2 * np.pi)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward application
+# ---------------------------------------------------------------------------
+
+def _apply_column(x: Array, t2: Array, top: Array, slot: Array, role: Array) -> Array:
+    """Apply one column of 2x2 cells to ``x[..., n]`` (complex), scatter-free.
+
+    t2: [P, 2, 2] complex cells; top: [P] int32; slot/role: [n] channel maps.
+    """
+    a = jnp.take(x, top, axis=-1)          # [..., P] top channel value
+    b = jnp.take(x, top + 1, axis=-1)      # [..., P] bottom channel value
+    a2 = t2[..., 0, 0] * a + t2[..., 0, 1] * b
+    b2 = t2[..., 1, 0] * a + t2[..., 1, 1] * b
+    from_top = jnp.take(a2, slot, axis=-1)  # [..., n]
+    from_bot = jnp.take(b2, slot, axis=-1)
+    return jnp.where(role == _ROLE_TOP, from_top,
+                     jnp.where(role == _ROLE_BOT, from_bot, x))
+
+
+def apply_mesh(plan: MeshPlan, params: dict, x: Array) -> Array:
+    """Propagate ``x[..., n]`` (complex64) through the mesh.
+
+    Optionally applies an input phase screen ``alpha_in`` (used by the
+    analytic Reck programmer, whose exact factorization places the diagonal
+    at the input side for this cell convention), then every cell column in
+    order, then the output phase screen ``Sigma = diag(e^{-j alpha})`` if
+    ``alpha`` is present (paper Eq. 27, negative-delay convention).
+    """
+    if x.shape[-1] != plan.n:
+        raise ValueError(f"expected trailing dim {plan.n}, got {x.shape}")
+    x = x.astype(jnp.complex64)
+    alpha_in = params.get("alpha_in")
+    if alpha_in is not None:
+        x = x * jnp.exp(-1j * alpha_in.astype(jnp.complex64))
+    theta, phi = params["theta"], params["phi"]
+    t_all = cell_matrix(theta, phi)  # [C, P, 2, 2]
+    # Mask inactive slots to identity so parked parameters cannot leak in.
+    eye = jnp.eye(2, dtype=t_all.dtype)
+    t_all = jnp.where(jnp.asarray(plan.active)[..., None, None], t_all, eye)
+
+    def step(carry, col):
+        t2, tp, sl, rl = col
+        return _apply_column(carry, t2, tp, sl, rl), None
+
+    cols = (t_all, jnp.asarray(plan.top), jnp.asarray(plan.slot), jnp.asarray(plan.role))
+    x, _ = jax.lax.scan(step, x, cols)
+    alpha = params.get("alpha")
+    if alpha is not None:
+        x = x * jnp.exp(-1j * alpha.astype(jnp.complex64))
+    return x
+
+
+def mesh_matrix(plan: MeshPlan, params: dict) -> Array:
+    """Materialize the N x N complex matrix realized by the mesh."""
+    eye = jnp.eye(plan.n, dtype=jnp.complex64)
+    cols = apply_mesh(plan, params, eye)  # row k of input -> T e_k
+    return cols.T
+
+
+def mesh_is_unitary(plan: MeshPlan, params: dict, atol: float = 1e-4) -> bool:
+    u = mesh_matrix(plan, params)
+    err = jnp.abs(u @ u.conj().T - jnp.eye(plan.n, dtype=u.dtype)).max()
+    return bool(err < atol)

@@ -1,0 +1,81 @@
+"""Discrete phase-shifter quantization (paper Sec. III, Table I).
+
+The prototype's phase shifters are two SP6T switch-selected line lengths:
+each shifter realizes one of six discrete phases (Table I), so a cell has
+36 states.  Two trainable-quantization paths are provided:
+
+* :func:`ste_quantize` — straight-through estimator: forward = nearest
+  codebook value, backward = identity.  Used on the SGD path ("quantization
+  aware" training of mesh phases).
+* integer state codes + :mod:`repro.core.dspsa` — the paper's Algorithm I
+  path, optimizing the discrete codes directly.
+
+``uniform_codebook`` supports beyond-paper resolution studies (e.g. the
+binary-neural-network remark in Sec. IV-A).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cell import TABLE_I_PHASES_RAD
+
+
+def table_i_codebook() -> jnp.ndarray:
+    """The six measured line phases of the prototype (radians)."""
+    return jnp.asarray(TABLE_I_PHASES_RAD, jnp.float32)
+
+
+def uniform_codebook(bits: int, lo: float = 0.0, hi: float = 2 * np.pi) -> jnp.ndarray:
+    """2**bits uniformly spaced phases in [lo, hi)."""
+    k = 2**bits
+    return jnp.linspace(lo, hi, k, endpoint=False).astype(jnp.float32)
+
+
+def nearest_code(phase: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Index of the nearest codebook entry (circular distance on phases)."""
+    d = phase[..., None] - codebook
+    d = jnp.abs(jnp.mod(d + np.pi, 2 * np.pi) - np.pi)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def codes_to_phase(codes: jax.Array, codebook: jax.Array) -> jax.Array:
+    return jnp.take(codebook, codes, axis=0)
+
+
+@jax.custom_vjp
+def ste_quantize(phase: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Nearest-codebook quantization with straight-through gradients."""
+    return codes_to_phase(nearest_code(phase, codebook), codebook)
+
+
+def _ste_fwd(phase, codebook):
+    return ste_quantize(phase, codebook), None
+
+
+def _ste_bwd(_, g):
+    return g, None
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)
+
+
+def quantize_mesh_params(params: dict, codebook: jax.Array, *, ste: bool = True) -> dict:
+    """Quantize the phase entries (theta/phi/alpha*) of a mesh param dict."""
+    fn = (lambda p: ste_quantize(p, codebook)) if ste else (
+        lambda p: codes_to_phase(nearest_code(p, codebook), codebook))
+    return {k: fn(v) if k in ("theta", "phi", "alpha", "alpha_in") else v
+            for k, v in params.items()}
+
+
+def mesh_params_to_codes(params: dict, codebook: jax.Array) -> dict:
+    """Project continuous mesh phases onto integer state codes (device view)."""
+    return {k: nearest_code(v, codebook)
+            for k, v in params.items() if k in ("theta", "phi", "alpha", "alpha_in")}
+
+
+def codes_to_mesh_params(codes: dict, codebook: jax.Array) -> dict:
+    """Device view back to phase values."""
+    return {k: codes_to_phase(v, codebook) for k, v in codes.items()}

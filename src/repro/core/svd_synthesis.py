@@ -1,0 +1,84 @@
+"""Arbitrary-matrix synthesis via SVD (paper Eq. 31, Sec. IV-B).
+
+Any real or complex matrix M factors as M = U . D . V^H with U, V unitary and
+D diagonal non-negative.  U and V^H are realized as cell meshes (programmed
+analytically by :func:`repro.core.decompose.reck_program`); D is realized as
+per-channel attenuation.  A passive network can only attenuate, so D is
+normalized by the largest singular value and the overall scale is recovered
+digitally — exactly the paper's pre/post scaling-factor gamma (Fig. 11).
+Rectangular matrices are zero-padded to the enclosing even square.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decompose, mesh as mesh_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SynthesizedMatrix:
+    """A programmed analog realization of an arbitrary matrix."""
+
+    out_dim: int
+    in_dim: int
+    n: int  # padded square size (even)
+    u_plan: mesh_lib.MeshPlan
+    u_params: dict
+    v_plan: mesh_lib.MeshPlan
+    v_params: dict
+    attenuation: jnp.ndarray  # [n] in [0, 1] — diagonal D / sigma_max
+    scale: float  # sigma_max, recovered in digital post-processing
+
+    @property
+    def n_cells(self) -> int:
+        return self.u_plan.n_cells + self.v_plan.n_cells
+
+    def apply(self, x: Array) -> Array:
+        """y = M x for x[..., in_dim]; returns [..., out_dim] (complex)."""
+        pad = self.n - x.shape[-1]
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+        h = mesh_lib.apply_mesh(self.v_plan, self.v_params, x)
+        h = h * self.attenuation.astype(jnp.complex64)
+        h = mesh_lib.apply_mesh(self.u_plan, self.u_params, h)
+        return self.scale * h[..., : self.out_dim]
+
+    def matrix(self) -> np.ndarray:
+        eye = jnp.eye(self.in_dim, dtype=jnp.complex64)
+        return np.asarray(self.apply(eye)).T
+
+
+def _pad_even(k: int) -> int:
+    return k + (k % 2)
+
+
+def synthesize(m: np.ndarray) -> SynthesizedMatrix:
+    """Program an analog realization of the (possibly rectangular) matrix m."""
+    m = np.asarray(m)
+    out_dim, in_dim = m.shape
+    n = _pad_even(max(out_dim, in_dim))
+    mp = np.zeros((n, n), np.complex128)
+    mp[:out_dim, :in_dim] = m
+    u, s, vh = np.linalg.svd(mp)
+    smax = float(s.max()) if s.max() > 0 else 1.0
+    u_plan, u_params = decompose.reck_program(u)
+    v_plan, v_params = decompose.reck_program(vh)
+    return SynthesizedMatrix(
+        out_dim=out_dim, in_dim=in_dim, n=n,
+        u_plan=u_plan, u_params=u_params,
+        v_plan=v_plan, v_params=v_params,
+        attenuation=jnp.asarray(s / smax, jnp.float32),
+        scale=smax,
+    )
+
+
+def synthesis_error(m: np.ndarray, syn: SynthesizedMatrix) -> float:
+    return float(np.abs(syn.matrix() - np.asarray(m)).max())

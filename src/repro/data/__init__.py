@@ -1,0 +1,8 @@
+"""Data pipelines: synthetic LM token streams (resumable, shardable),
+procedural digits (MNIST stand-in), and the paper's 2x2 toy datasets."""
+
+from repro.data.tokens import TokenStream
+from repro.data.digits import load_digits
+from repro.data.toys import make_toy_dataset
+
+__all__ = ["TokenStream", "load_digits", "make_toy_dataset"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+givens_mesh      — the paper's mesh MVM (columns of 2x2 complex rotations)
+flash_attention  — fused attention (motivated by the roofline's memory term)
+ops              — jitted public wrappers
+ref              — pure-jnp oracles (the allclose ground truth)
+EXAMPLE.md       — scaffold notes
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+
+__all__ = ["ops", "ref", "flash_attention"]

@@ -1,0 +1,158 @@
+"""Pallas TPU kernels for the RF mesh apply — the paper's MVM hot spot.
+
+TPU adaptation of the analog propagation: one mesh column is a set of
+independent 2x2 complex rotations on channel pairs — pure VPU elementwise
+work once channels are de-interleaved into even/odd (re, im) planes of shape
+[batch, N/2].  The kernels keep a batch panel **resident in VMEM** and run
+all N columns in-register/VMEM, the TPU analogue of the RF signal passing
+through all S = N(N-1)/2 cells without intermediate storage (HBM traffic is
+2 reads + 2 writes of the panel total, instead of per-column round trips).
+
+Layout choices (see DESIGN.md):
+  * planes [B, P] with P = N/2 on the lane dimension (128-aligned for N>=256);
+  * coefficients [C, 8, P]: 8 rows = (t00, t01, t10, t11) x (re, im) per pair
+    slot, broadcast over the batch sublanes;
+  * odd columns act on (odd_i, even_{i+1}) via shifted slices — static
+    slicing only, no gathers.
+
+Kernels:
+  * ``mesh_kernel`` — one mesh (the unitary T(N) of paper Eq. 28).
+  * ``rfnn_linear_kernel`` — fused analog linear layer
+    V-mesh -> diag gain -> U-mesh -> |detect| (paper Eq. 31 + Fig. 14),
+    one VMEM residency for the whole layer.
+
+Validated against ``ref.py`` in interpret mode (this container is CPU-only;
+TPU is the compilation target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cmul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def _rotate(cc, ar, ai, br, bi):
+    """Apply the 2x2 complex rotations in an 8-row coefficient slice."""
+    xr, xi = _cmul(cc[0], cc[1], ar, ai)
+    yr, yi = _cmul(cc[2], cc[3], br, bi)
+    a2r, a2i = xr + yr, xi + yi
+    xr, xi = _cmul(cc[4], cc[5], ar, ai)
+    yr, yi = _cmul(cc[6], cc[7], br, bi)
+    return a2r, a2i, xr + yr, xi + yi
+
+
+def _column_body(coef_ref, c, state):
+    """One mesh column on the de-interleaved planes."""
+    er, ei, orr, oi = state
+    cc = coef_ref[c]  # [8, P] dynamic-sliced from VMEM
+
+    def even(_):
+        a2r, a2i, b2r, b2i = _rotate(cc, er, ei, orr, oi)
+        return a2r, a2i, b2r, b2i
+
+    def odd(_):
+        ar, ai = orr[:, :-1], oi[:, :-1]
+        br, bi = er[:, 1:], ei[:, 1:]
+        a2r, a2i, b2r, b2i = _rotate(cc[:, :-1], ar, ai, br, bi)
+        ner = jnp.concatenate([er[:, :1], b2r], axis=1)
+        nei = jnp.concatenate([ei[:, :1], b2i], axis=1)
+        nor = jnp.concatenate([a2r, orr[:, -1:]], axis=1)
+        noi = jnp.concatenate([a2i, oi[:, -1:]], axis=1)
+        return ner, nei, nor, noi
+
+    return jax.lax.cond(c % 2 == 0, even, odd, None)
+
+
+def _run_columns(coef_ref, state):
+    n_cols = coef_ref.shape[0]
+    return jax.lax.fori_loop(
+        0, n_cols, functools.partial(_column_body, coef_ref), state)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: single mesh
+# ---------------------------------------------------------------------------
+
+def mesh_kernel(coef_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
+                oer_ref, oei_ref, oor_ref, ooi_ref):
+    state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
+    er, ei, orr, oi = _run_columns(coef_ref, state)
+    oer_ref[...] = er
+    oei_ref[...] = ei
+    oor_ref[...] = orr
+    ooi_ref[...] = oi
+
+
+def mesh_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
+                     interpret: bool):
+    p = n // 2
+    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
+    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
+    out_shape = [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
+                                      jnp.float32)] * 4
+    flops_per_block = 2 * (n * (n - 1) // 2) * batch_block * 16
+    return pl.pallas_call(
+        mesh_kernel,
+        grid=(n_batch_blocks,),
+        in_specs=[coef, plane, plane, plane, plane],
+        out_specs=[plane] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops_per_block * n_batch_blocks,
+            bytes_accessed=(8 * batch_block * p * 4 + n * 8 * p * 4)
+            * n_batch_blocks,
+            transcendentals=0,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: fused analog linear  (V-mesh -> diag -> U-mesh -> |detect|)
+# ---------------------------------------------------------------------------
+
+def rfnn_linear_kernel(coef_v_ref, coef_u_ref, gains_ref,
+                       xer_ref, xei_ref, xor_ref, xoi_ref,
+                       oe_ref, oo_ref):
+    state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
+    er, ei, orr, oi = _run_columns(coef_v_ref, state)
+    g = gains_ref[...]  # [8, P]: g1 (even re/im, odd re/im), g2 (...)
+    er, ei = _cmul(er, ei, g[0], g[1])
+    orr, oi = _cmul(orr, oi, g[2], g[3])
+    er, ei, orr, oi = _run_columns(coef_u_ref, (er, ei, orr, oi))
+    er, ei = _cmul(er, ei, g[4], g[5])
+    orr, oi = _cmul(orr, oi, g[6], g[7])
+    oe_ref[...] = jnp.sqrt(er * er + ei * ei)   # |detect| on even channels
+    oo_ref[...] = jnp.sqrt(orr * orr + oi * oi)
+
+
+def rfnn_linear_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
+                            interpret: bool):
+    p = n // 2
+    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
+    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
+    gains = pl.BlockSpec((8, p), lambda i: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
+                                      jnp.float32)] * 2
+    flops_per_block = 2 * (2 * (n * (n - 1) // 2) * 16 + 3 * n) * batch_block
+    return pl.pallas_call(
+        rfnn_linear_kernel,
+        grid=(n_batch_blocks,),
+        in_specs=[coef, coef, gains, plane, plane, plane, plane],
+        out_specs=[plane] * 2,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops_per_block * n_batch_blocks,
+            bytes_accessed=(6 * batch_block * p * 4 + 2 * n * 8 * p * 4
+                            + 8 * p * 4) * n_batch_blocks,
+            transcendentals=batch_block * p * 2 * n_batch_blocks,
+        ),
+    )

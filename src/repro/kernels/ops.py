@@ -1,0 +1,95 @@
+"""Jitted public wrappers around the Pallas mesh kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites run in this
+CPU container (kernel body executed op-by-op) and compile to Mosaic on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import givens_mesh, ref
+
+Array = jax.Array
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_batch(x2d: Array, block: int) -> tuple[Array, int]:
+    b = x2d.shape[0]
+    pad = (-b) % block
+    if pad:
+        x2d = jnp.concatenate(
+            [x2d, jnp.zeros((pad,) + x2d.shape[1:], x2d.dtype)], axis=0)
+    return x2d, b
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_b", "interpret"))
+def mesh_apply(params: dict, x: Array, *, n: int, block_b: int = 128,
+               interpret: bool | None = None) -> Array:
+    """Apply a Clements-layout mesh to ``x[..., n]`` via the Pallas kernel.
+
+    Semantics match ``repro.core.mesh.apply_mesh`` on a clements plan
+    (including the optional output phase screen ``alpha``).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape((-1, n)).astype(jnp.complex64)
+    x2, b_orig = _pad_batch(x2, block_b)
+    nb = x2.shape[0] // block_b
+
+    coef = ref.clements_coefficients(params["theta"], params["phi"], n)
+    planes = ref.split_channels(x2)
+    call = givens_mesh.mesh_pallas_call(n, block_b, nb, interpret)
+    planes = call(coef, *planes)
+    y = ref.merge_channels(*planes)[:b_orig]
+    alpha = params.get("alpha")
+    if alpha is not None:
+        y = y * jnp.exp(-1j * alpha.astype(jnp.complex64))
+    return y.reshape(batch_shape + (n,))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_b", "interpret"))
+def rfnn_linear(v_params: dict, atten: Array, u_params: dict, x: Array, *,
+                n: int, scale: Array | float = 1.0, block_b: int = 128,
+                interpret: bool | None = None) -> Array:
+    """Fused analog linear layer |scale * U(D(V x))| via the Pallas kernel.
+
+    ``atten``: [n] real attenuation (paper's diagonal D / sigma_max);
+    ``scale``: the digital gamma.  Output is the detected magnitude [.., n].
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape((-1, n)).astype(jnp.complex64)
+    x2, b_orig = _pad_batch(x2, block_b)
+    nb = x2.shape[0] // block_b
+
+    coef_v = ref.clements_coefficients(v_params["theta"], v_params["phi"], n)
+    coef_u = ref.clements_coefficients(u_params["theta"], u_params["phi"], n)
+
+    # fold V's output screen into the mid-gain and U's into the post-gain
+    g1 = atten.astype(jnp.complex64)
+    if v_params.get("alpha") is not None:
+        g1 = g1 * jnp.exp(-1j * v_params["alpha"].astype(jnp.complex64))
+    g2 = jnp.full((n,), jnp.asarray(scale, jnp.complex64))
+    if u_params.get("alpha") is not None:
+        g2 = g2 * jnp.exp(-1j * u_params["alpha"].astype(jnp.complex64))
+    gains = jnp.stack([
+        jnp.real(g1[0::2]), jnp.imag(g1[0::2]),
+        jnp.real(g1[1::2]), jnp.imag(g1[1::2]),
+        jnp.real(g2[0::2]), jnp.imag(g2[0::2]),
+        jnp.real(g2[1::2]), jnp.imag(g2[1::2]),
+    ]).astype(jnp.float32)
+
+    planes = ref.split_channels(x2)
+    call = givens_mesh.rfnn_linear_pallas_call(n, block_b, nb, interpret)
+    oe, oo = call(coef_v, coef_u, gains, *planes)
+    out = jnp.stack([oe, oo], axis=-1).reshape((-1, n))[:b_orig]
+    return out.reshape(batch_shape + (n,))

@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder CPU devices build the production meshes, every
+cell's step function must ``.lower().compile()``, and the compiled artifact
+yields ``memory_analysis()`` (fits?) and ``cost_analysis()`` (FLOPs/bytes for
+the roofline).  Results are dumped as JSON for EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import configs
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import describe, make_production_mesh
+
+# bytes moved per collective op are summed from the lowered stablehlo/HLO
+_COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
+                "u8": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the compiled HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "ops": 0}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match op kind in the instruction name, e.g. "%all-reduce.5 = ..."
+        m = re.match(r"%?[\w.-]*\b(all-gather|all-reduce|reduce-scatter|"
+                     r"all-to-all|collective-permute)[\w.-]*\s*=", s)
+        if not m:
+            continue
+        if "-start" in s.split("=")[0] and "-done" not in s.split("=")[0]:
+            pass  # async start carries the payload shape; done repeats it
+        if "-done" in s.split("=")[0]:
+            continue
+        kind = m.group(1)
+        # output shape(s) = bytes moved (per device)
+        lhs = s.split("=", 1)[1]
+        lhs = lhs.split("(")[0] if "(" in lhs else lhs
+        out[kind] += _shape_bytes(lhs)
+        out["ops"] += 1
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    t0 = time.time()
+    cell = specs_lib.build_cell(arch, shape_name, mesh, multi_pod=multi_pod)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": describe(mesh),
+        "multi_pod": multi_pod,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0) if cost else 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                       + getattr(mem, "temp_size_in_bytes", 0)),
+        "collectives": coll,
+    }
+    if verbose:
+        gb = 1 << 30
+        print(f"  [OK] {arch} x {shape_name} on {describe(mesh)}: "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s | "
+              f"args {result['argument_bytes']/gb:.2f}GiB "
+              f"temp {result['temp_bytes']/gb:.2f}GiB | "
+              f"flops/dev {result['flops']:.3g} | "
+              f"coll ops {coll['ops']}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells = configs.grid()
+    else:
+        if not args.arch:
+            ap.error("--arch or --all required")
+        shapes = [args.shape] if args.shape else configs.shapes_for(args.arch)
+        cells = [(args.arch, s) for s in shapes]
+
+    mesh_kinds = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    failures = []
+    for multi_pod in mesh_kinds:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        print(f"== mesh {describe(mesh)} ({len(mesh.devices.flat)} chips) ==")
+        for arch, shape in cells:
+            tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+            try:
+                result = run_cell(arch, shape, mesh, multi_pod)
+                (outdir / f"{tag}.json").write_text(json.dumps(result, indent=1))
+            except Exception as e:  # a failure here is a sharding bug
+                failures.append((tag, repr(e)))
+                print(f"  [FAIL] {tag}: {e}")
+                traceback.print_exc(limit=4)
+
+    print(f"\n{len(cells) * len(mesh_kinds) - len(failures)} passed, "
+          f"{len(failures)} failed")
+    for tag, err in failures:
+        print(f"  FAIL {tag}: {err[:200]}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,28 @@
+"""Production mesh factory.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips over
+("data", "model"); multi-pod: 2 pods x 256 = 512 chips with the leading
+"pod" axis (DCI links between pods, ICI within).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_dp_shards(mesh) -> int:
+    """Total data-parallel shards (pod x data)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def describe(mesh) -> str:
+    return "x".join(f"{n}={s}" for n, s in
+                    zip(mesh.axis_names, mesh.devices.shape))

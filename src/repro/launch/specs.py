@@ -1,0 +1,312 @@
+"""Per-(arch x shape) cell construction for the dry-run and benchmarks.
+
+Builds, without allocating anything:
+  * the runtime-adjusted ModelConfig (bf16, remat, expert groups, cache len);
+  * the sharding rules profile for the shape kind (the long-context profile
+    moves the DP axes from batch to the KV/cache sequence dim);
+  * ShapeDtypeStruct stand-ins for every input (weak-type-correct, shardable);
+  * NamedSharding pytrees for inputs/outputs;
+  * the step function to lower (train_step / prefill / serve_step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import mesh_dp_shards
+from repro.models.api import Model
+from repro.optim.adamw import AdamW
+from repro.parallel import sharding as sh
+from repro.train import step as train_step_lib
+
+S = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# per-arch runtime profiles (memory/perf knobs, see EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchProfile:
+    fsdp_params: bool = False        # shard param embed dims over data
+    moment_dtype: str = "float32"
+    grad_compression: bool = False
+    accum_steps: int = 1
+    remat: str = "full"              # train-time activation checkpointing
+    #: train with pure data-parallelism over BOTH mesh axes (no TP).  For
+    #: models whose params+opt fit on one chip, Megatron-TP activation
+    #: all-reduces (~2.5GB/layer/step) cost far more ICI than the single
+    #: gradient all-reduce pure DP needs (§Perf cell B).
+    pure_dp_train: bool = False
+
+
+PROFILES: dict[str, ArchProfile] = {
+    # 400B: params cannot replicate over DP — FSDP the embed dims, compress
+    # grads over DCI, bf16 moments.
+    "llama4-maverick-400b-a17b": ArchProfile(
+        fsdp_params=True, moment_dtype="bfloat16", grad_compression=True,
+        accum_steps=4),
+    "qwen2-moe-a2.7b": ArchProfile(fsdp_params=True),
+    "tinyllama-1.1b": ArchProfile(
+        pure_dp_train=True, moment_dtype="bfloat16", grad_compression=True,
+        remat="outputs"),
+}
+
+_DEFAULT_PROFILE = ArchProfile()
+
+
+def profile_for(arch: str) -> ArchProfile:
+    return PROFILES.get(arch, _DEFAULT_PROFILE)
+
+
+# ---------------------------------------------------------------------------
+# rules per shape kind
+# ---------------------------------------------------------------------------
+
+def rules_for(arch: str, shape_name: str, multi_pod: bool) -> sh.ShardingRules:
+    base = sh.default_rules(multi_pod).rules.copy()
+    prof = profile_for(arch)
+    kind = configs.SHAPES[shape_name].kind
+    if prof.fsdp_params and kind != "decode":
+        # parameters' embed dims shard over data (FSDP); activation
+        # constraints dedupe "batch" vs "embed" automatically.  Decode is
+        # excluded: re-gathering FSDP shards every decode step costs ~GBs of
+        # ICI per token, while inference weights (no optimizer state) fit
+        # replicated over data (see EXPERIMENTS.md §Perf cell C).
+        base["mlp_embed"] = "data"
+        base["embed"] = "data"
+    if prof.pure_dp_train and kind == "train":
+        gb = configs.SHAPES[shape_name].global_batch
+        if multi_pod and gb % 512 == 0:
+            dp_axes: tuple = ("pod", "data", "model")
+        elif multi_pod:
+            # batch doesn't divide 512: shard over 256 and replicate across
+            # pods (grad AR still averages correctly; pods duplicate compute
+            # — preferable to TP's per-layer activation ARs for tiny models)
+            dp_axes = ("data", "model")
+        else:
+            dp_axes = ("data", "model")
+        for name in ("heads", "kv_heads", "ffn", "vocab", "experts",
+                     "expert_ffn", "ssm_heads", "conv_dim"):
+            base[name] = None
+        base["batch"] = dp_axes
+        base["expert_group"] = dp_axes
+        base["fsdp"] = dp_axes
+    if shape_name == "long_500k":
+        base["batch"] = None
+        base["expert_group"] = None
+        base["kv_seq"] = ("pod", "data") if multi_pod else ("data",)
+    elif configs.SHAPES[shape_name].kind == "decode":
+        # batched decode: batch over DP axes, cache *sequence* over "model"
+        # (distributed flash-decode: GSPMD lowers the softmax/value reductions
+        # over the sharded length to small all-reduces).  KV heads replicate —
+        # sharding them fragments GSPMD propagation through the GQA reshape
+        # and forces replicate-repartition copies of the whole cache.  Q/O
+        # projection weights shard over heads (padded to 16); the tiny q
+        # activation is re-replicated right after projection (decode_attention)
+        # so the cache einsums stay in the seq-sharded layout.
+        base["kv_seq"] = "model"
+        base["kv_heads"] = None
+    return sh.ShardingRules(rules=base)
+
+
+def runtime_config(arch: str, shape_name: str, multi_pod: bool):
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    prof = profile_for(arch)
+    dp = 32 if multi_pod else 16
+    upd: dict[str, Any] = {
+        "dtype": "bfloat16",
+        "expert_groups": max(1, min(dp, shape.global_batch)),
+        "remat": prof.remat if shape.kind == "train" else "none",
+        "max_cache_len": shape.seq_len if shape.kind == "decode" else 0,
+    }
+    if cfg.vocab_size % 256:
+        # pad the vocab (standard practice) so the vocab axis shards 16-way;
+        # padded logits are masked to -inf in unembed (vocab_real).
+        upd["vocab_size"] = -(-cfg.vocab_size // 256) * 256
+        upd["vocab_real"] = cfg.vocab_size
+    if cfg.n_heads > 1 and cfg.n_heads % 16 and cfg.n_kv_heads < cfg.n_heads:
+        # (GQA/MQA only: padding an MHA arch (kv == heads) forces a KV
+        # expansion gather whose backward costs more than the sharding win —
+        # measured on whisper, §Perf notes)
+        # pad q-heads with dead (masked, zero) heads so attention weights &
+        # compute shard over the 16-way model axis instead of replicating
+        # (§Perf: 40-head llama4 was reading ~100MB/layer of replicated
+        # attention weights per device).  Semantics-preserving: the GQA
+        # head->kv map keeps the original grouping for real heads.
+        upd["head_pad"] = -(-cfg.n_heads // 16) * 16 - cfg.n_heads
+    return dataclasses.replace(cfg, **upd), shape
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def _tokens_seq_len(cfg, shape) -> int:
+    if cfg.family == "vlm":
+        return shape.seq_len - cfg.n_vis_tokens
+    return shape.seq_len
+
+
+def batch_specs(cfg, shape) -> dict:
+    """ShapeDtypeStruct stand-ins for one global batch."""
+    b = shape.global_batch
+    s = _tokens_seq_len(cfg, shape)
+    specs = {"tokens": S((b, s), jnp.int32), "labels": S((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["vis_embed"] = S((b, cfg.n_vis_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        specs["frames"] = S((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def batch_shardings(mesh, rules) -> dict:
+    def ns(*names):
+        return NamedSharding(mesh, rules.spec(*names))
+    return {"tokens": ns("batch", None), "labels": ns("batch", None),
+            "vis_embed": ns("batch", None, None),
+            "frames": ns("batch", None, None)}
+
+
+def _axis_size(mesh, ax) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= sizes[a]
+        return n
+    return sizes[ax]
+
+
+def _is_logical_leaf(t):
+    return isinstance(t, tuple) and all(
+        isinstance(i, (str, type(None))) for i in t)
+
+
+def resolve_shardings(mesh, rules, spec_tree, shapes_tree):
+    """Logical specs -> NamedShardings, dropping axes that don't divide.
+
+    pjit requires argument shardings to divide the dimension exactly; any
+    logical assignment that doesn't (e.g. 24 heads on a 16-way model axis)
+    falls back to replication for that dim.  The roofline table makes such
+    replication visible (it shows up as compute/memory waste to hillclimb).
+    """
+    def leaf(t, shape_struct):
+        p = rules.spec(*t)
+        dims = shape_struct.shape
+        fixed = [ax if (ax is None or dims[i] % _axis_size(mesh, ax) == 0)
+                 else None
+                 for i, ax in enumerate(tuple(p) + (None,) * (len(dims) - len(p)))]
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree.map(leaf, spec_tree, shapes_tree,
+                        is_leaf=_is_logical_leaf)
+
+
+def logical_tree_to_shardings(mesh, rules, spec_tree):
+    return jax.tree.map(
+        lambda t: NamedSharding(mesh, rules.spec(*t)), spec_tree,
+        is_leaf=_is_logical_leaf)
+
+
+# ---------------------------------------------------------------------------
+# cell: everything needed to lower one (arch x shape) on one mesh
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    cfg: Any
+    model: Model
+    rules: sh.ShardingRules
+    mesh: Any
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple[int, ...]
+
+    def lower(self):
+        with sh.use_mesh_and_rules(self.mesh, self.rules):
+            jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                             out_shardings=self.out_shardings,
+                             donate_argnums=self.donate)
+            return jitted.lower(*self.args)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool) -> Cell:
+    cfg, shape = runtime_config(arch, shape_name, multi_pod)
+    rules = rules_for(arch, shape_name, multi_pod)
+    prof = profile_for(arch)
+    model = Model(cfg)
+
+    pspec_tree = model.param_specs()
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if shape.kind in ("prefill", "decode"):
+        # serving holds bf16 weights: halves weight-read bytes (the decode
+        # memory floor) and weight all-gather traffic vs f32 training params.
+        param_shapes = jax.tree.map(
+            lambda s: S(s.shape, jnp.bfloat16)
+            if s.dtype == jnp.float32 else s, param_shapes)
+    param_sh = resolve_shardings(mesh, rules, pspec_tree, param_shapes)
+
+    logit_sh = NamedSharding(mesh, rules.spec("batch", "vocab"))
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4,
+                    moment_dtype=getattr(jnp, prof.moment_dtype),
+                    grad_compression=prof.grad_compression)
+        tstep = train_step_lib.make_train_step(model, opt,
+                                               accum_steps=prof.accum_steps)
+        state_shapes = train_step_lib.TrainState(
+            params=param_shapes,
+            opt=jax.eval_shape(opt.init, param_shapes))
+        state_sh = train_step_lib.TrainState(
+            params=param_sh,
+            opt=resolve_shardings(mesh, rules, opt.state_specs(pspec_tree),
+                                  state_shapes.opt))
+        bsh = {k: v for k, v in batch_shardings(mesh, rules).items()
+               if k in batch_specs(cfg, shape)}
+        return Cell(arch, shape_name, cfg, model, rules, mesh, tstep,
+                    (state_shapes, batch_specs(cfg, shape)),
+                    (state_sh, bsh), (state_sh, None), (0,))
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, max_len=shape.seq_len)
+        bsh = {k: v for k, v in batch_shardings(mesh, rules).items()
+               if k in batch_specs(cfg, shape)}
+        cache_shapes = jax.eval_shape(
+            functools.partial(model.init_cache, shape.global_batch,
+                              shape.seq_len))
+        cache_sh = resolve_shardings(mesh, rules, model.cache_specs(),
+                                     cache_shapes)
+        return Cell(arch, shape_name, cfg, model, rules, mesh, prefill_fn,
+                    (param_shapes, batch_specs(cfg, shape)),
+                    (param_sh, bsh), (logit_sh, cache_sh), ())
+
+    # decode: one new token against a seq_len cache
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, token, cache, pos)
+
+    b = shape.global_batch
+    cache_shapes = jax.eval_shape(
+        functools.partial(model.init_cache, b, shape.seq_len))
+    cache_sh = resolve_shardings(mesh, rules, model.cache_specs(),
+                                 cache_shapes)
+    token_spec = S((b,), jnp.int32)
+    pos_spec = S((), jnp.int32)
+    return Cell(arch, shape_name, cfg, model, rules, mesh, serve_step,
+                (param_shapes, cache_shapes, token_spec, pos_spec),
+                (param_sh, cache_sh, NamedSharding(mesh, rules.spec("batch")),
+                 NamedSharding(mesh, P())),
+                (logit_sh, cache_sh), (1,))

@@ -1,0 +1,6 @@
+"""Model stack: configs, layers, families, unified facade."""
+
+from repro.models.api import Model, cross_entropy
+from repro.models.config import ModelConfig
+
+__all__ = ["Model", "ModelConfig", "cross_entropy"]

@@ -1,0 +1,104 @@
+"""Unified model facade: one object per architecture config.
+
+Dispatches to the decoder-LM stack or the encoder-decoder stack per family
+and owns the loss so train/serve steps are family-agnostic:
+
+    model = Model(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, token, cache, pos)
+
+``batch`` keys: tokens [B,S] int32; labels [B,S] int32 (-1 = masked,
+already shifted by the data pipeline); vis_embed [B,n_vis,D] (vlm);
+frames [B,enc_seq,D] (encdec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_lib
+from repro.models import lm as lm_lib
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def cross_entropy(logits: Array, labels: Array) -> tuple[Array, Array]:
+    """Masked next-token CE in f32.  labels == -1 are masked."""
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    loss = nll.sum() / denom
+    acc = ((jnp.argmax(logits, -1) == lab) * mask).sum() / denom
+    return loss, acc
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- init / specs ----------------
+    def init(self, key) -> dict:
+        if self.cfg.family == "encdec":
+            return encdec_lib.init_encdec(key, self.cfg)
+        return lm_lib.init_lm(key, self.cfg)
+
+    def param_specs(self) -> dict:
+        if self.cfg.family == "encdec":
+            return encdec_lib.spec_encdec(self.cfg)
+        return lm_lib.spec_lm(self.cfg)
+
+    # ---------------- train ----------------
+    def forward(self, params, batch) -> tuple[Array, Array]:
+        if self.cfg.family == "encdec":
+            return encdec_lib.forward(params, self.cfg, batch["tokens"],
+                                      batch["frames"])
+        return lm_lib.forward(params, self.cfg, batch["tokens"],
+                              batch.get("vis_embed"))
+
+    def loss(self, params, batch) -> tuple[Array, dict]:
+        logits, aux = self.forward(params, batch)
+        if self.cfg.family == "vlm":
+            logits = logits[:, self.cfg.n_vis_tokens:]
+        ce, acc = cross_entropy(logits, batch["labels"])
+        total = ce + self.cfg.router_aux_weight * aux
+        return total, {"ce": ce, "acc": acc, "moe_aux": aux}
+
+    # ---------------- serve ----------------
+    def prefill(self, params, batch, max_len: int | None = None):
+        if self.cfg.family == "encdec":
+            return encdec_lib.prefill(params, self.cfg, batch["tokens"],
+                                      batch["frames"], max_len)
+        return lm_lib.prefill(params, self.cfg, batch["tokens"],
+                              batch.get("vis_embed"), max_len)
+
+    def decode_step(self, params, token, cache, pos):
+        if self.cfg.family == "encdec":
+            return encdec_lib.decode_step(params, self.cfg, token, cache, pos)
+        return lm_lib.decode_step(params, self.cfg, token, cache, pos)
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        if self.cfg.family == "encdec":
+            return encdec_lib.init_dec_cache(self.cfg, batch, max_len)
+        return lm_lib.init_lm_cache(self.cfg, batch, max_len)
+
+    def cache_specs(self) -> dict:
+        if self.cfg.family == "encdec":
+            return encdec_lib.spec_dec_cache(self.cfg)
+        return lm_lib.spec_lm_cache(self.cfg)
+
+    # ---------------- info ----------------
+    def param_count(self) -> int:
+        return self.cfg.param_count()
+
+    def active_param_count(self) -> int:
+        return self.cfg.active_param_count()

@@ -1,0 +1,297 @@
+"""Grouped-query attention: flash-style chunked train/prefill + cached decode.
+
+Train/prefill use an online-softmax scan over KV chunks (memory O(S*chunk)
+instead of O(S^2)).  Decode consumes a KV cache; with the cache length
+sharded over the data axis (long-context profile) the score/softmax/value
+chain lowers to a GSPMD flash-decode: partial max/sum reductions plus a
+final psum — no code change needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rope_frequencies, truncated_normal
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _h_tot(cfg: ModelConfig) -> int:
+    return cfg.n_heads + cfg.head_pad
+
+
+def _head_mask(cfg: ModelConfig):
+    """1 for real heads, 0 for padding heads (kept dead at use sites)."""
+    if not cfg.head_pad:
+        return None
+    return (jnp.arange(_h_tot(cfg)) < cfg.n_heads)
+
+
+def head_to_kv_map(cfg: ModelConfig) -> jnp.ndarray:
+    """Which KV head each (possibly padded) q head attends with.
+
+    Real heads keep the *original* GQA grouping (h // (H/KV)) so padding is
+    semantics-preserving; dead pad heads read kv 0 (their output is masked).
+    """
+    g = cfg.n_heads // cfg.n_kv_heads
+    real = jnp.arange(cfg.n_heads) // g
+    if not cfg.head_pad:
+        return real.astype(jnp.int32)
+    pad = jnp.zeros((cfg.head_pad,), real.dtype)
+    return jnp.concatenate([real, pad]).astype(jnp.int32)
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, _h_tot(cfg), cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    wq = truncated_normal(ks[0], (d, h, hd), s)
+    wo = truncated_normal(ks[3], (h, hd, d), 1.0 / np.sqrt(h * hd))
+    if cfg.head_pad:  # dead heads start (and are masked) at zero
+        dead = jnp.arange(h) >= cfg.n_heads
+        wq = jnp.where(dead[None, :, None], 0.0, wq)
+        wo = jnp.where(dead[:, None, None], 0.0, wo)
+    return {
+        "wq": wq,
+        "wk": truncated_normal(ks[1], (d, kv, hd), s),
+        "wv": truncated_normal(ks[2], (d, kv, hd), s),
+        "wo": wo,
+    }
+
+
+def spec_attention() -> dict:
+    return {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+def _project_qkv(params, cfg: ModelConfig, xq: Array, xkv: Array):
+    dt = xq.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"].astype(dt))
+    return q, k, v
+
+
+def _flash_over_kv(q_blk, kc, vc, pc, q_pos_blk, causal, scale):
+    """Online-softmax scan of one q block over a stack of KV chunks.
+
+    q_blk: [B,Sq,H,hd]; kc/vc: [n_chunks,B,chunk,H,hd]; pc: [n_chunks,chunk].
+    """
+    b, sq, h, hd = q_blk.shape
+
+    def step(carry, inp):
+        acc, m, l = carry
+        kci, vci, pci = inp
+        s = jnp.einsum("bqhd,bchd->bhqc", q_blk, kci).astype(jnp.float32)
+        s = s * scale
+        mask = pci[None, :] > q_pos_blk[:, None] if causal else (
+            pci[None, :] >= 2**30)
+        s = jnp.where(mask[None, None], NEG_INF, s)
+        s = constrain(s, "batch", "heads", None, None)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqc,bchd->bhqd", p.astype(q_blk.dtype), vci)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, hd), q_blk.dtype)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kc, vc, pc))
+    return acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+
+
+def _flash_chunks(q, k, v, q_pos, kv_pos, cfg: ModelConfig, causal: bool):
+    """Online-softmax attention over KV chunks with causal block skipping.
+
+    q: [B,Sq,H,hd]; k,v: [B,Skv,H,hd] (KV heads pre-expanded to H so every
+    tensor carries the same model-sharded head axis — grouped layouts
+    fragment GSPMD's sharding propagation); positions int32 [Sq]/[Skv].
+
+    For causal self-attention (Sq == Skv) the q axis is blocked and each q
+    block only visits its KV prefix, halving attention FLOPs and score
+    traffic vs the naive full-rectangle scan (§Perf cell B iteration 2).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    chunk = min(cfg.attn_chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=2**30)
+    kc = k.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(n_chunks, chunk)
+    scale = 1.0 / np.sqrt(hd)
+
+    # causal q blocking: at most 8 statically unrolled q blocks, each a
+    # multiple of the kv chunk so block boundaries align
+    blockable = (causal and sq == skv and n_chunks > 1 and pad == 0)
+    if not blockable:
+        out = _flash_over_kv(q, kc, vc, pc, q_pos, causal, scale)
+        return out.transpose(0, 2, 1, 3)
+
+    chunks_per_block = max(1, -(-n_chunks // 8))
+    q_block = chunks_per_block * chunk
+    n_blocks = -(-sq // q_block)
+    outs = []
+    for i in range(n_blocks):
+        lo, hi = i * q_block, min((i + 1) * q_block, sq)
+        kv_hi = -(-hi // chunk)  # KV prefix covering this block
+        out_i = _flash_over_kv(q[:, lo:hi], kc[:kv_hi], vc[:kv_hi],
+                               pc[:kv_hi], q_pos[lo:hi], True, scale)
+        outs.append(out_i)
+    out = jnp.concatenate(outs, axis=2)  # [B,H,Sq,hd]
+    return out.transpose(0, 2, 1, 3)  # [B,Sq,H,hd]
+
+
+def attention(params, cfg: ModelConfig, x: Array, positions: Array, *,
+              causal: bool = True, rope: bool = True,
+              kv_override: tuple[Array, Array] | None = None,
+              return_kv: bool = False):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, s, _ = x.shape
+    if kv_override is None:
+        q, k, v = _project_qkv(params, cfg, x, x)
+        kv_pos = positions
+    else:
+        dt = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+        k, v = kv_override
+        kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    if rope and kv_override is None:
+        cos, sin = rope_frequencies(cfg, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    kv_out = (k, v)
+    if _h_tot(cfg) != cfg.n_kv_heads:
+        # expand KV per q-head (original GQA grouping preserved under head
+        # padding) so all flash tensors share the model-sharded H axis
+        hmap = head_to_kv_map(cfg)
+        k = jnp.take(k, hmap, axis=2)
+        v = jnp.take(v, hmap, axis=2)
+        k = constrain(k, "batch", "seq", "heads", "head_dim")
+        v = constrain(v, "batch", "seq", "heads", "head_dim")
+    if (cfg.attn_impl == "pallas" and k.shape[1] == s
+            and s % min(cfg.attn_chunk, s) == 0):
+        # fused Pallas flash kernel (TPU target; interpret on CPU): score
+        # blocks stay in VMEM — zero score HBM traffic (§Perf cell B)
+        from repro.kernels.flash_attention import flash_attention
+        blk = min(cfg.attn_chunk, s, 128)
+        out = flash_attention(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3),
+                              causal=causal, bq=blk, bk=blk)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        out = _flash_chunks(q, k, v, positions, kv_pos, cfg, causal)
+    wo = params["wo"].astype(x.dtype)
+    mask = _head_mask(cfg)
+    if mask is not None:
+        wo = wo * mask[:, None, None].astype(wo.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    if return_kv:
+        return y, kv_out
+    return y
+
+
+def project_cross_kv(params, cfg: ModelConfig, memory: Array):
+    """Precompute cross-attention K/V from encoder memory (whisper)."""
+    dt = memory.dtype
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"].astype(dt))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# cached decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def spec_cache() -> dict:
+    return {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+
+
+def prefill_into_cache(cache: dict, k: Array, v: Array) -> dict:
+    s = k.shape[1]
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    return cache
+
+
+def decode_attention(params, cfg: ModelConfig, x: Array, cache: dict,
+                     pos: Array, *, rope: bool = True,
+                     update_cache: bool = True) -> tuple[Array, dict]:
+    """One-token attention against the cache.
+
+    x: [B, 1, D]; pos: scalar int32 (current position).  With ``kv_seq``
+    sharded, the softmax/value reductions lower to a distributed
+    flash-decode.  ``update_cache=False`` reads without writing (cross-attn).
+    """
+    b = x.shape[0]
+    g = cfg.n_heads // cfg.n_kv_heads
+    q, k_new, v_new = _project_qkv(params, cfg, x, x)
+    # decode activations are tiny: pin the projection output to the weight
+    # sharding (so GSPMD computes it sharded instead of all-gathering the
+    # weights), then explicitly all-gather the small q for the cache einsums
+    q = constrain(q, "batch", None, "heads", "head_dim")
+    q = constrain(q, "batch", None, None, None)
+    if rope:
+        posv = jnp.full((1,), pos, jnp.int32)
+        cos, sin = rope_frequencies(cfg, posv)
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    if update_cache:
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+        cache["k"] = constrain(cache["k"], "batch", "kv_seq", "kv_heads",
+                               "head_dim")
+        cache["v"] = constrain(cache["v"], "batch", "kv_seq", "kv_heads",
+                               "head_dim")
+    k, v = cache["k"], cache["v"]
+    s_len = k.shape[1]
+    # decode keeps the grouped form over *real* heads only (pad heads are
+    # dead; slicing avoids expanding the cache reads by the group factor)
+    q = q[..., : cfg.n_heads, :]
+    qg = q.reshape(b, 1, cfg.n_kv_heads, g, cfg.head_dim)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, k.astype(qg.dtype))
+    scores = scores.astype(jnp.float32) / np.sqrt(cfg.head_dim)
+    valid = jnp.arange(s_len, dtype=jnp.int32)[None] <= pos
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qg.dtype)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs, v.astype(qg.dtype))
+    out = out.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    wo = params["wo"][: cfg.n_heads].astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, cache

@@ -1,0 +1,232 @@
+"""Encoder-decoder transformer (whisper-large-v3 backbone).
+
+Per the assignment brief the conv/mel frontend is a **stub**: the encoder
+consumes precomputed frame embeddings [B, enc_seq, d_model] supplied by
+``input_specs``.  Sinusoidal position encodings are added to the frames
+(as in whisper); the decoder uses RoPE self-attention (documented deviation
+from whisper's learned positions — see DESIGN.md) plus cross-attention to
+the encoder memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def sinusoids(length: int, channels: int) -> np.ndarray:
+    half = channels // 2
+    t = np.log(10000.0) / (half - 1)
+    inv = np.exp(-t * np.arange(half))
+    ang = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+def _init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": attn_lib.init_attention(k1, cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(k2, cfg)}
+
+
+def _init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.init_rmsnorm(cfg.d_model),
+            "self_attn": attn_lib.init_attention(k1, cfg),
+            "ln_x": L.init_rmsnorm(cfg.d_model),
+            "cross_attn": attn_lib.init_attention(k2, cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(k3, cfg)}
+
+
+def _spec_enc_layer(cfg):
+    return {"ln1": L.spec_rmsnorm(), "attn": attn_lib.spec_attention(),
+            "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp(cfg)}
+
+
+def _spec_dec_layer(cfg):
+    return {"ln1": L.spec_rmsnorm(), "self_attn": attn_lib.spec_attention(),
+            "ln_x": L.spec_rmsnorm(), "cross_attn": attn_lib.spec_attention(),
+            "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp(cfg)}
+
+
+def init_encdec(key, cfg: ModelConfig) -> dict:
+    ke, kenc, kdec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": L.init_rmsnorm(cfg.d_model),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+
+
+def spec_encdec(cfg: ModelConfig) -> dict:
+    def stack(tree):
+        return jax.tree.map(lambda t: ("layers",) + t, tree,
+                            is_leaf=lambda t: isinstance(t, tuple))
+    return {
+        "embed": L.spec_embed(cfg),
+        "enc_blocks": stack(_spec_enc_layer(cfg)),
+        "enc_norm": L.spec_rmsnorm(),
+        "dec_blocks": stack(_spec_dec_layer(cfg)),
+        "final_norm": L.spec_rmsnorm(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def encode(params: dict, cfg: ModelConfig, frames: Array) -> Array:
+    """frames: [B, enc_seq, D] precomputed embeddings (frontend stub)."""
+    x = frames.astype(cfg.activation_dtype())
+    x = x + jnp.asarray(sinusoids(x.shape[1], cfg.d_model)).astype(x.dtype)
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def step(carry, lp):
+        h = L.rmsnorm(lp["ln1"], carry, cfg.norm_eps)
+        carry = carry + attn_lib.attention(lp["attn"], cfg, h, positions,
+                                           causal=False, rope=False)
+        h = L.rmsnorm(lp["ln2"], carry, cfg.norm_eps)
+        carry = carry + L.mlp(lp["mlp"], cfg, h)
+        return constrain(carry, "batch", "seq", "embed"), None
+
+    x, _ = jax.lax.scan(step, x, params["enc_blocks"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_superblock(cfg, positions, memory, carry, lp):
+    x = carry
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    x = x + attn_lib.attention(lp["self_attn"], cfg, h, positions)
+    h = L.rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+    kv = attn_lib.project_cross_kv(lp["cross_attn"], cfg, memory)
+    x = x + attn_lib.attention(lp["cross_attn"], cfg, h, positions,
+                               causal=False, rope=False, kv_override=kv)
+    h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp(lp["mlp"], cfg, h)
+    return constrain(x, "batch", "seq", "embed"), None
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array,
+            frames: Array) -> tuple[Array, Array]:
+    """Teacher-forced decode over the full target sequence."""
+    memory = encode(params, cfg, frames)
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    step = functools.partial(_dec_superblock, cfg, positions, memory)
+    if cfg.remat in ("full", "dots"):
+        step = jax.checkpoint(step, prevent_cse=False)
+    x, _ = jax.lax.scan(step, x, params["dec_blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return constrain(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with self-attn cache and precomputed cross-KV
+# ---------------------------------------------------------------------------
+
+def init_dec_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = cfg.activation_dtype()
+    one = {"self": attn_lib.init_cache(cfg, batch, max_len, dt),
+           "cross_k": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads,
+                                 cfg.head_dim), dt),
+           "cross_v": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads,
+                                 cfg.head_dim), dt)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+
+
+def spec_dec_cache(cfg: ModelConfig) -> dict:
+    c = {"self": attn_lib.spec_cache(),
+         "cross_k": ("batch", None, "kv_heads", "head_dim"),
+         "cross_v": ("batch", None, "kv_heads", "head_dim")}
+    return jax.tree.map(lambda t: ("layers",) + t, c,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: Array, frames: Array,
+            max_len: int | None = None) -> tuple[Array, dict]:
+    """Encode + teacher-forced pass building self/cross caches."""
+    memory = encode(params, cfg, frames)
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    x = constrain(x, "batch", "seq", "embed")
+    s = x.shape[1]
+    max_len = max_len or cfg.max_cache_len or s
+    positions = jnp.arange(s, dtype=jnp.int32)
+    dt = cfg.activation_dtype()
+
+    def step(carry, lp):
+        x = carry
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        y, (k, v) = attn_lib.attention(lp["self_attn"], cfg, h, positions,
+                                       return_kv=True)
+        x = x + y
+        entry = attn_lib.init_cache(cfg, x.shape[0], max_len, dt)
+        self_cache = attn_lib.prefill_into_cache(entry, k, v)
+        h = L.rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+        ck, cv = attn_lib.project_cross_kv(lp["cross_attn"], cfg, memory)
+        x = x + attn_lib.attention(lp["cross_attn"], cfg, h, positions,
+                                   causal=False, rope=False,
+                                   kv_override=(ck, cv))
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], cfg, h)
+        x = constrain(x, "batch", "seq", "embed")
+        return x, {"self": self_cache, "cross_k": ck.astype(dt),
+                   "cross_v": cv.astype(dt)}
+
+    x, cache = jax.lax.scan(step, x, params["dec_blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x[:, -1:])[:, 0]
+    return constrain(logits, "batch", "vocab"), cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict,
+                pos: Array) -> tuple[Array, dict]:
+    x = L.embed_tokens(params["embed"], cfg, token[:, None])
+    x = constrain(x, "batch", None, "embed")
+
+    def step(carry, xs):
+        x = carry
+        lp, lc = xs
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        y, self_cache = attn_lib.decode_attention(lp["self_attn"], cfg, h,
+                                                  lc["self"], pos)
+        x = x + y
+        h = L.rmsnorm(lp["ln_x"], x, cfg.norm_eps)
+        y, _ = attn_lib.decode_attention(
+            lp["cross_attn"], cfg, h,
+            {"k": lc["cross_k"], "v": lc["cross_v"]},
+            jnp.asarray(cfg.enc_seq - 1, jnp.int32),
+            rope=False, update_cache=False)
+        x = x + y
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], cfg, h)
+        return x, {"self": self_cache, "cross_k": lc["cross_k"],
+                   "cross_v": lc["cross_v"]}
+
+    x, new_cache = jax.lax.scan(step, x, (params["dec_blocks"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)[:, 0]
+    return constrain(logits, "batch", "vocab"), new_cache

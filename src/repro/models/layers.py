@@ -1,0 +1,177 @@
+"""Shared transformer layers: norms, embeddings, RoPE, MLP variants.
+
+Every ``init_*`` has a mirrored ``spec_*`` returning the same pytree
+structure with logical-axis tuples (converted to PartitionSpec by the
+launcher); tests assert the mirror stays in sync.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def spec_rmsnorm() -> dict:
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> dict:
+    p = {"table": truncated_normal(key, (cfg.vocab_size, cfg.d_model),
+                                   1.0 / np.sqrt(cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncated_normal(
+            jax.random.fold_in(key, 1), (cfg.vocab_size, cfg.d_model),
+            1.0 / np.sqrt(cfg.d_model))
+    return p
+
+
+def spec_embed(cfg: ModelConfig) -> dict:
+    p = {"table": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ("vocab", "embed")
+    return p
+
+
+def embed_tokens(params: dict, cfg: ModelConfig, tokens: Array) -> Array:
+    x = jnp.take(params["table"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model)
+    return x.astype(cfg.activation_dtype())
+
+
+def unembed(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    table = params["table"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if cfg.vocab_real and cfg.vocab_real < cfg.vocab_size:
+        pad = jnp.arange(cfg.vocab_size) >= cfg.vocab_real
+        logits = jnp.where(pad, jnp.float32(-1e30).astype(logits.dtype), logits)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(cfg: ModelConfig, positions: Array) -> tuple[Array, Array]:
+    """cos/sin tables [..., head_dim/2] for integer positions."""
+    half = cfg.head_dim // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: [..., seq, heads, head_dim]; cos/sin: [..., seq, head_dim/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU) — digital matmuls or the paper's analog processor
+# ---------------------------------------------------------------------------
+
+def _analog_layers(cfg: ModelConfig, d: int, f: int):
+    """The MLP's three projections as tiled RF analog processors."""
+    from repro.core.analog_linear import TiledAnalogLinear
+    mk = lambda i, o: TiledAnalogLinear(
+        in_dim=i, out_dim=o, tile_size=cfg.rfnn_tile,
+        quantize=cfg.rfnn_quantize, output="real")
+    return {"wi": mk(d, f), "wg": mk(d, f), "wo": mk(f, d)}
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.linear_impl == "rfnn":
+        # paper integration: projections realized by tiled analog SVD
+        # meshes (phases + attenuations are the trainable params)
+        layers = _analog_layers(cfg, d, f)
+        p = {"wi": layers["wi"].init(k1), "wo": layers["wo"].init(k3)}
+        if cfg.mlp_variant in ("swiglu", "geglu"):
+            p["wg"] = layers["wg"].init(k2)
+        return p
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {
+        "wi": truncated_normal(k1, (d, f), s_in),
+        "wo": truncated_normal(k3, (f, d), s_out),
+    }
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        p["wg"] = truncated_normal(k2, (d, f), s_in)
+    return p
+
+
+def _replicated_like(tree):
+    return jax.tree.map(lambda x: (None,) * jnp.ndim(x), tree)
+
+
+def spec_mlp(cfg: ModelConfig | None = None) -> dict:
+    if cfg is not None and cfg.linear_impl == "rfnn":
+        shapes = jax.eval_shape(
+            lambda k: init_mlp(k, cfg), jax.random.PRNGKey(0))
+        return jax.tree.map(lambda s: (None,) * len(s.shape), shapes)
+    p = {"wi": ("embed", "ffn"), "wo": ("ffn", "embed")}
+    if cfg is None or cfg.mlp_variant in ("swiglu", "geglu"):
+        p["wg"] = ("embed", "ffn")
+    return p
+
+
+def mlp(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    dt = x.dtype
+    if cfg.linear_impl == "rfnn":
+        d = x.shape[-1]
+        layers = _analog_layers(cfg, cfg.d_model, cfg.d_ff)
+        xf = x.astype(jnp.float32)
+        h = layers["wi"].apply(params["wi"], xf)
+        if cfg.mlp_variant in ("swiglu", "geglu"):
+            act = jax.nn.gelu if cfg.mlp_variant == "geglu" else jax.nn.silu
+            h = h * act(layers["wg"].apply(params["wg"], xf))
+        else:
+            h = jax.nn.gelu(h)
+        return layers["wo"].apply(params["wo"], h).astype(dt)
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(dt))
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        act = jax.nn.gelu if cfg.mlp_variant == "geglu" else jax.nn.silu
+        g = jnp.einsum("...d,df->...f", x, params["wg"].astype(dt))
+        h = h * act(g)
+    else:  # plain gelu (whisper)
+        h = jax.nn.gelu(h)
+    if h.ndim == 3:
+        h = constrain(h, "batch", "seq", "ffn")
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(dt))

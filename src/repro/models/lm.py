@@ -1,0 +1,382 @@
+"""Decoder-only language models: dense / MoE / SSM / hybrid / VLM.
+
+Layers are *scanned*: parameters are stacked over a leading super-block axis
+and the forward pass is a single ``lax.scan``, so the HLO (and multi-pod
+compile time) is O(1) in depth.  A super-block is the family's repeating
+pattern:
+
+  dense/vlm    1 layer  (attn + mlp)
+  moe          ``moe_interleave`` layers (dense..., moe)
+  ssm          1 mamba2 layer
+  hybrid       ``attn_every`` mamba2 layers + one invocation of the *shared*
+               attention block (weights live outside the scan and are reused
+               by every invocation — zamba2's weight tying)
+
+Modes: ``forward`` (train/eval over full seq), ``prefill`` (forward + cache),
+``decode_step`` (one token).  Caches are pytrees stacked over the same
+super-block axis so the same scan drives them.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# per-family super-block init/spec
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": attn_lib.init_attention(k1, cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(k2, cfg)}
+
+
+def _spec_dense_layer(cfg):
+    return {"ln1": L.spec_rmsnorm(), "attn": attn_lib.spec_attention(),
+            "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp(cfg)}
+
+
+def _init_moe_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": attn_lib.init_attention(k1, cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "moe": moe_lib.init_moe(k2, cfg)}
+
+
+def _spec_moe_layer(cfg):
+    return {"ln1": L.spec_rmsnorm(), "attn": attn_lib.spec_attention(),
+            "ln2": L.spec_rmsnorm(), "moe": moe_lib.spec_moe(cfg)}
+
+
+def _init_ssm_layer(key, cfg):
+    return {"ln": L.init_rmsnorm(cfg.d_model),
+            "ssm": ssm_lib.init_ssm(key, cfg)}
+
+
+def _spec_ssm_layer(cfg):
+    return {"ln": L.spec_rmsnorm(), "ssm": ssm_lib.spec_ssm()}
+
+
+def superblock_layout(cfg: ModelConfig) -> tuple[int, list[str]]:
+    """(number of super-blocks, layer kinds inside one super-block)."""
+    if cfg.family in ("dense", "vlm"):
+        return cfg.n_layers, ["dense"]
+    if cfg.family == "moe":
+        il = cfg.moe_interleave
+        assert cfg.n_layers % il == 0
+        return cfg.n_layers // il, ["dense"] * (il - 1) + ["moe"]
+    if cfg.family == "ssm":
+        return cfg.n_layers, ["ssm"]
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        assert cfg.n_layers % k == 0
+        return cfg.n_layers // k, ["ssm"] * k + ["shared_attn"]
+    raise ValueError(cfg.family)
+
+
+_LAYER_INIT = {"dense": _init_dense_layer, "moe": _init_moe_layer,
+               "ssm": _init_ssm_layer}
+_LAYER_SPEC = {"dense": _spec_dense_layer, "moe": _spec_moe_layer,
+               "ssm": _spec_ssm_layer}
+
+
+def _init_superblock(key, cfg):
+    kinds = superblock_layout(cfg)[1]
+    p = {}
+    for i, kind in enumerate(kinds):
+        if kind == "shared_attn":
+            continue  # lives outside the scan
+        p[f"l{i}_{kind}"] = _LAYER_INIT[kind](jax.random.fold_in(key, i), cfg)
+    return p
+
+
+def _spec_superblock(cfg):
+    kinds = superblock_layout(cfg)[1]
+    return {f"l{i}_{kind}": _LAYER_SPEC[kind](cfg)
+            for i, kind in enumerate(kinds) if kind != "shared_attn"}
+
+
+# ---------------------------------------------------------------------------
+# model init / specs
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    n_super = superblock_layout(cfg)[0]
+    ke, kb, ks = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, n_super)
+    blocks = jax.vmap(lambda k: _init_superblock(k, cfg))(block_keys)
+    params = {
+        "embed": L.init_embed(ke, cfg),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "blocks": blocks,
+    }
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(ks)
+        params["shared_attn"] = {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": attn_lib.init_attention(k1, cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(k2, cfg),
+        }
+    return params
+
+
+def spec_lm(cfg: ModelConfig) -> dict:
+    def stack(tree):  # prepend the scanned super-block axis
+        return jax.tree.map(lambda t: ("layers",) + t, tree,
+                            is_leaf=lambda t: isinstance(t, tuple))
+    specs = {
+        "embed": L.spec_embed(cfg),
+        "final_norm": L.spec_rmsnorm(),
+        "blocks": stack(_spec_superblock(cfg)),
+    }
+    if cfg.family == "hybrid":
+        specs["shared_attn"] = {
+            "ln1": L.spec_rmsnorm(), "attn": attn_lib.spec_attention(),
+            "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp(cfg),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval)
+# ---------------------------------------------------------------------------
+
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+
+def _ckpt_name(x, name):
+    return _checkpoint_name(x, name)
+
+
+def _run_layer_full(kind, lp, cfg, x, positions, shared, aux):
+    if kind in ("dense", "moe"):
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + _ckpt_name(
+            attn_lib.attention(lp["attn"], cfg, h, positions), "attn_out")
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if kind == "moe":
+            y, a = moe_lib.moe_block(lp["moe"], cfg, h)
+            aux = aux + a
+        else:
+            y = L.mlp(lp["mlp"], cfg, h)
+        x = x + _ckpt_name(y, "mlp_out")
+    elif kind == "ssm":
+        h = L.rmsnorm(lp["ln"], x, cfg.norm_eps)
+        x = x + _ckpt_name(ssm_lib.ssm_block(lp["ssm"], cfg, h), "ssm_out")
+    elif kind == "shared_attn":
+        sp = shared
+        h = L.rmsnorm(sp["ln1"], x, cfg.norm_eps)
+        x = x + _ckpt_name(
+            attn_lib.attention(sp["attn"], cfg, h, positions), "attn_out")
+        h = L.rmsnorm(sp["ln2"], x, cfg.norm_eps)
+        x = x + _ckpt_name(L.mlp(sp["mlp"], cfg, h), "mlp_out")
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _superblock_full(cfg, kinds, shared, carry, block_params, positions):
+    x, aux = carry
+    for i, kind in enumerate(kinds):
+        lp = block_params.get(f"l{i}_{kind}")
+        x, aux = _run_layer_full(kind, lp, cfg, x, positions, shared, aux)
+        x = constrain(x, "batch", "seq", "embed")
+    return (x, aux), None
+
+
+def _embed_input(params, cfg, tokens, vis_embed):
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    if cfg.family == "vlm":
+        if vis_embed is None:
+            raise ValueError("vlm family requires vis_embed")
+        x = jnp.concatenate([vis_embed.astype(x.dtype), x], axis=1)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Array,
+            vis_embed: Array | None = None) -> tuple[Array, Array]:
+    """Full-sequence forward.  Returns (logits, moe_aux_loss)."""
+    x = _embed_input(params, cfg, tokens, vis_embed)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    kinds = superblock_layout(cfg)[1]
+    shared = params.get("shared_attn")
+
+    step = functools.partial(_superblock_full, cfg, kinds, shared,
+                             positions=positions)
+    if cfg.remat == "full":
+        step = jax.checkpoint(step, prevent_cse=False)
+    elif cfg.remat == "outputs":
+        # save each sub-layer's output: backward never re-runs the attention
+        # forward (its score traffic is the memory-bound term; §Perf cell B)
+        step = jax.checkpoint(
+            step, prevent_cse=False,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "mlp_out", "ssm_out"))
+    elif cfg.remat == "dots":
+        step = jax.checkpoint(
+            step, prevent_cse=False,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), _ = jax.lax.scan(step, (x, aux0), params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode cache stacked over super-blocks (mirrors params['blocks'])."""
+    dt = cfg.activation_dtype()
+    n_super, kinds = superblock_layout(cfg)
+
+    def one_super():
+        c = {}
+        for i, kind in enumerate(kinds):
+            if kind in ("dense", "moe"):
+                c[f"l{i}_{kind}"] = attn_lib.init_cache(cfg, batch, max_len, dt)
+            elif kind == "ssm":
+                c[f"l{i}_{kind}"] = ssm_lib.init_ssm_cache(cfg, batch, dt)
+            elif kind == "shared_attn":
+                c[f"l{i}_{kind}"] = attn_lib.init_cache(cfg, batch, max_len, dt)
+        return c
+
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_super,) + x.shape), one_super())
+
+
+def spec_lm_cache(cfg: ModelConfig) -> dict:
+    _, kinds = superblock_layout(cfg)
+    c = {}
+    for i, kind in enumerate(kinds):
+        if kind in ("dense", "moe", "shared_attn"):
+            s = attn_lib.spec_cache()
+        else:
+            s = ssm_lib.spec_ssm_cache()
+        c[f"l{i}_{kind}"] = s
+    return jax.tree.map(lambda t: ("layers",) + t, c,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _superblock_decode(cfg, kinds, shared, pos, carry, xs):
+    x = carry
+    block_params, cache = xs
+    new_cache = {}
+    for i, kind in enumerate(kinds):
+        name = f"l{i}_{kind}"
+        lp = block_params.get(name)
+        lc = cache[name]
+        if kind in ("dense", "moe"):
+            h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            y, lc = attn_lib.decode_attention(lp["attn"], cfg, h, lc, pos)
+            x = x + y
+            h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            if kind == "moe":
+                y, _ = moe_lib.moe_block(lp["moe"], cfg, h)
+            else:
+                y = L.mlp(lp["mlp"], cfg, h)
+            x = x + y
+        elif kind == "ssm":
+            h = L.rmsnorm(lp["ln"], x, cfg.norm_eps)
+            y, lc = ssm_lib.ssm_decode_step(lp["ssm"], cfg, h, lc)
+            x = x + y
+        elif kind == "shared_attn":
+            h = L.rmsnorm(shared["ln1"], x, cfg.norm_eps)
+            y, lc = attn_lib.decode_attention(shared["attn"], cfg, h, lc, pos)
+            x = x + y
+            h = L.rmsnorm(shared["ln2"], x, cfg.norm_eps)
+            x = x + L.mlp(shared["mlp"], cfg, h)
+        new_cache[name] = lc
+    return x, new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: Array, cache: dict,
+                pos: Array) -> tuple[Array, dict]:
+    """One decode step.  token: [B] int32; pos: scalar.  -> (logits, cache)."""
+    x = L.embed_tokens(params["embed"], cfg, token[:, None])
+    x = constrain(x, "batch", None, "embed")
+    kinds = superblock_layout(cfg)[1]
+    shared = params.get("shared_attn")
+    step = functools.partial(_superblock_decode, cfg, kinds, shared, pos)
+    x, new_cache = jax.lax.scan(step, x, (params["blocks"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)[:, 0]
+    return constrain(logits, "batch", "vocab"), new_cache
+
+
+def _superblock_prefill(cfg, kinds, shared, positions, max_len, carry,
+                        block_params):
+    x, aux = carry
+    dt = cfg.activation_dtype()
+    cache_out = {}
+    for i, kind in enumerate(kinds):
+        name = f"l{i}_{kind}"
+        lp = shared if kind == "shared_attn" else block_params.get(name)
+        if kind in ("dense", "moe", "shared_attn"):
+            h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+            y, (k, v) = attn_lib.attention(lp["attn"], cfg, h, positions,
+                                           return_kv=True)
+            x = x + y
+            entry = attn_lib.init_cache(cfg, x.shape[0], max_len, dt)
+            cache_out[name] = attn_lib.prefill_into_cache(entry, k, v)
+            h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            if kind == "moe":
+                y, a = moe_lib.moe_block(lp["moe"], cfg, h)
+                aux = aux + a
+            else:
+                y = L.mlp(lp["mlp"], cfg, h)
+            x = x + y
+        elif kind == "ssm":
+            h = L.rmsnorm(lp["ln"], x, cfg.norm_eps)
+            y, c = ssm_lib.ssm_block(lp["ssm"], cfg, h, return_cache=True)
+            x = x + y
+            cache_out[name] = {"state": c["state"],
+                               "conv_x": c["conv_x"].astype(dt),
+                               "conv_b": c["conv_b"].astype(dt),
+                               "conv_c": c["conv_c"].astype(dt)}
+        x = constrain(x, "batch", "seq", "embed")
+    return (x, aux), cache_out
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: Array,
+            vis_embed: Array | None = None,
+            max_len: int | None = None) -> tuple[Array, dict]:
+    """Prefill: full-sequence pass producing last-position logits + cache."""
+    x = _embed_input(params, cfg, tokens, vis_embed)
+    s = x.shape[1]
+    max_len = max_len or cfg.max_cache_len or s
+    positions = jnp.arange(s, dtype=jnp.int32)
+    kinds = superblock_layout(cfg)[1]
+    shared = params.get("shared_attn")
+    step = functools.partial(_superblock_prefill, cfg, kinds, shared,
+                             positions, max_len)
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, _), cache = jax.lax.scan(step, (x, aux0), params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x[:, -1:])[:, 0]
+    return constrain(logits, "batch", "vocab"), cache

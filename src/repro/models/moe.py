@@ -1,0 +1,229 @@
+"""Mixture-of-Experts block: top-k routing, capacity dispatch, EP sharding.
+
+GShard-style dropping MoE, formulated so GSPMD produces the canonical
+expert-parallel schedule:
+
+  1. tokens are grouped [G, T, D] with G sharded over the DP axes;
+  2. dispatch is a *local* scatter into a per-group expert buffer
+     [G, E, C, D] (same sharding as the tokens — no communication);
+  3. a sharding-constraint flips the buffer from G-sharded to E-sharded —
+     GSPMD lowers this reshard to the expert-parallel **all-to-all**;
+  4. expert FFNs run with experts sharded over the DP axes and the expert
+     FFN dim sharded over "model" (TP inside experts);
+  5. the output buffer is resharded back (second all-to-all) and combined
+     with the top-k gates; dropped tokens fall through on the residual.
+
+Padded experts (e.g. qwen's 60 -> 64 for even sharding) are masked out of
+the router, so routing behaves exactly like the unpadded model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(fe)
+    p = {
+        "router": truncated_normal(ks[0], (d, e), s_in),
+        "wi": truncated_normal(ks[1], (e, d, fe), s_in),
+        "wg": truncated_normal(ks[2], (e, d, fe), s_in),
+        "wo": truncated_normal(ks[3], (e, fe, d), s_out),
+    }
+    if cfg.n_shared_experts:
+        f_sh = cfg.n_shared_experts * cfg.d_ff_shared
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi": truncated_normal(k1, (d, f_sh), s_in),
+            "wg": truncated_normal(k2, (d, f_sh), s_in),
+            "wo": truncated_normal(k3, (f_sh, d), 1.0 / np.sqrt(f_sh)),
+        }
+    return p
+
+
+def spec_moe(cfg: ModelConfig) -> dict:
+    p = {
+        "router": ("embed", None),
+        "wi": ("experts", "mlp_embed", "expert_ffn"),
+        "wg": ("experts", "mlp_embed", "expert_ffn"),
+        "wo": ("experts", "expert_ffn", "mlp_embed"),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = {"wi": ("embed", "ffn"), "wg": ("embed", "ffn"),
+                       "wo": ("ffn", "embed")}
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(np.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor
+                    / cfg.n_experts))
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+# ---------------------------------------------------------------------------
+# gather-only dispatch/combine
+#
+# A scatter of [G,T*k,D] values makes GSPMD replicate the destination and
+# all-reduce partial scatters (it cannot prove shard-locality), and the same
+# happens to the *backward* of a gather.  With the slot<->choice index maps
+# precomputed (tiny int32 scatters), both dispatch and combine — and their
+# transposes — become batched gathers that stay local to the G-sharded
+# batch dim (§Perf cell A).
+# ---------------------------------------------------------------------------
+
+def _gather_rows(x_pad: jax.Array, idx: jax.Array) -> jax.Array:
+    """x_pad: [G, N+1, D] (last row zero); idx: [G, M] -> [G, M, D]."""
+    return jnp.take_along_axis(x_pad, idx[..., None], axis=1)
+
+
+def _pad_zero_row(x: jax.Array) -> jax.Array:
+    return jnp.concatenate(
+        [x, jnp.zeros(x.shape[:1] + (1,) + x.shape[2:], x.dtype)], axis=1)
+
+
+@jax.custom_vjp
+def _dispatch(xg, tok_of_slot, slot_of_choice):
+    """tokens [G,T,D] -> slots [G,E*C,D] (sentinel slots produce zeros)."""
+    return _gather_rows(_pad_zero_row(xg), tok_of_slot)
+
+
+def _dispatch_fwd(xg, tok_of_slot, slot_of_choice):
+    return _dispatch(xg, tok_of_slot, slot_of_choice), (
+        slot_of_choice, xg.shape[1])
+
+
+def _dispatch_bwd(res, d_buf):
+    slot_of_choice, t = res
+    g, tk = slot_of_choice.shape
+    picked = _gather_rows(_pad_zero_row(d_buf), slot_of_choice)  # [G,T*k,D]
+    d_xg = picked.reshape(g, t, tk // t, -1).sum(axis=2)
+    return d_xg, None, None
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@jax.custom_vjp
+def _combine(out, slot_of_choice, choice_of_slot):
+    """slots [G,E*C,D] -> per-choice rows [G,T*k,D] (dropped -> zeros)."""
+    return _gather_rows(_pad_zero_row(out), slot_of_choice)
+
+
+def _combine_fwd(out, slot_of_choice, choice_of_slot):
+    return _combine(out, slot_of_choice, choice_of_slot), (choice_of_slot,)
+
+
+def _combine_bwd(res, d_picked):
+    (choice_of_slot,) = res
+    d_out = _gather_rows(_pad_zero_row(d_picked), choice_of_slot)
+    return d_out, None, None
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+def moe_block(params: dict, cfg: ModelConfig, x: Array) -> tuple[Array, Array]:
+    """x: [B, S, D] -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = min(cfg.expert_groups, b)
+    t = (b // g) * s
+    cap = _capacity(cfg, t)
+    dt = x.dtype
+
+    xg = x.reshape(g, t, d)
+    xg = constrain(xg, "expert_group", None, None)
+
+    # ---- router (f32 for numerics) ----
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    if cfg.n_experts_active < e:  # padded experts never receive tokens
+        pad_mask = jnp.arange(e) >= cfg.n_experts_active
+        logits = jnp.where(pad_mask, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)     # [G,T,k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- positions within each expert queue (dropping beyond capacity) ----
+    flat_idx = expert_idx.reshape(g, t * k)
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.float32)   # [G,T*k,E]
+    onehot = constrain(onehot, "expert_group", None, None)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) - 1.0)
+    pos_in_e = constrain(pos_in_e, "expert_group", None, None)
+    pos = jnp.einsum("gxe,gxe->gx", pos_in_e, onehot).astype(jnp.int32)
+    keep = pos < cap
+
+    # ---- dispatch by gather ----
+    # Scattering the [G,T*k,D] token values into the buffer makes GSPMD
+    # replicate the full buffer and all-reduce partial scatters (it cannot
+    # prove the writes are shard-local), costing ~50x the ideal all-to-all —
+    # and the same happens to the backward of a plain gather.  So: scatter
+    # only tiny int32 slot<->choice maps, and route values (fwd AND bwd)
+    # exclusively through batched gathers (§Perf cell A).
+    tok_of_choice = jnp.repeat(jnp.arange(t), k)          # [T*k]
+    g_ids = jnp.arange(g)[:, None] * jnp.ones((1, t * k), jnp.int32)
+    slot_of_choice = jnp.where(keep, flat_idx * cap + pos, e * cap)
+    tok_of_slot = jnp.full((g, e * cap), t, jnp.int32).at[
+        g_ids, slot_of_choice].set(jnp.broadcast_to(tok_of_choice, (g, t * k)))
+    choice_of_slot = jnp.full((g, e * cap), t * k, jnp.int32).at[
+        g_ids, slot_of_choice].set(
+        jnp.broadcast_to(jnp.arange(t * k), (g, t * k)))
+    tok_of_slot = constrain(tok_of_slot, "expert_group", None)
+    choice_of_slot = constrain(choice_of_slot, "expert_group", None)
+
+    buf = _dispatch(xg, tok_of_slot, slot_of_choice).reshape(g, e, cap, d)
+    buf = constrain(buf, "expert_group", None, None, None)
+
+    # ---- all-to-all: G-sharded -> E-sharded ----
+    buf = constrain(buf, None, "experts", None, None)
+
+    # ---- expert FFNs (TP over expert_ffn) ----
+    h = jnp.einsum("gecd,edf->gecf", buf, params["wi"].astype(dt))
+    gt = jnp.einsum("gecd,edf->gecf", buf, params["wg"].astype(dt))
+    h = h * jax.nn.silu(gt)
+    h = constrain(h, None, "experts", None, "expert_ffn")
+    out = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(dt))
+    # (keeping D model-sharded here to force a reduce-scatter was tried and
+    # REFUTED: GSPMD inserted extra reshards, +42% collective bytes —
+    # see EXPERIMENTS.md §Perf cell A iteration 4)
+    out = constrain(out, None, "experts", None, None)
+
+    # ---- all-to-all back: E-sharded -> G-sharded ----
+    out = constrain(out, "expert_group", None, None, None)
+
+    # ---- combine with gates ----
+    # gather each choice's slot (dropped choices hit the zero sentinel row),
+    # then sum the k choices per token — a pure reshape+sum, no scatter.
+    picked = _combine(out.reshape(g, e * cap, d), slot_of_choice,
+                      choice_of_slot)                     # [G,T*k,D]
+    w = (gate_vals.reshape(g, t * k) * keep).astype(dt)
+    picked = picked * w[..., None]
+    yg = picked.reshape(g, t, k, d).sum(axis=2)
+    y = yg.reshape(b, s, d)
+    y = constrain(y, "batch", "seq", None)
+
+    # ---- shared experts (plain dense MLP path) ----
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        hs = jnp.einsum("bsd,df->bsf", x, sh["wi"].astype(dt))
+        gs = jnp.einsum("bsd,df->bsf", x, sh["wg"].astype(dt))
+        hs = hs * jax.nn.silu(gs)
+        hs = constrain(hs, "batch", "seq", "ffn")
+        y = y + jnp.einsum("bsf,fd->bsd", hs, sh["wo"].astype(dt))
+
+    # ---- load-balance aux (switch-style), over real experts only ----
+    frac = jnp.mean(onehot[..., : cfg.n_experts_active], axis=(0, 1))
+    prob = jnp.mean(probs[..., : cfg.n_experts_active], axis=(0, 1))
+    aux = cfg.n_experts_active * jnp.sum(frac * prob)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,218 @@
+"""Mamba2 — state-space duality (SSD) blocks (arXiv:2405.21060).
+
+Training/prefill use the chunked dual form: within-chunk attention-like
+scores (C B^T masked by the decay kernel) plus an inter-chunk state
+recurrence (``lax.scan`` over chunks).  Decode is the O(1) recurrent update
+on a [B, H, state, headdim] carry.  Heads shard over "model"; the state is
+tiny and stays replicated within a shard.
+
+Single B/C group (n_groups=1) as in the mamba2-780m config; the causal
+depthwise conv (window 4) is applied to x, B and C as in the reference
+implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    # A initialized in [1, 16) as in mamba2; dt bias via inverse softplus of
+    # dt ~ U[1e-3, 1e-1]
+    a_init = jnp.exp(jax.random.uniform(ks[5], (h,), minval=0.0,
+                                        maxval=np.log(16.0)))
+    dt = jnp.exp(jax.random.uniform(ks[6], (h,),
+                                    minval=np.log(1e-3), maxval=np.log(1e-1)))
+    return {
+        "w_z": truncated_normal(ks[0], (d, di), s),
+        "w_x": truncated_normal(ks[1], (d, di), s),
+        "w_b": truncated_normal(ks[2], (d, n), s),
+        "w_c": truncated_normal(ks[3], (d, n), s),
+        "w_dt": truncated_normal(ks[4], (d, h), s),
+        "conv_x": truncated_normal(ks[7], (cfg.ssm_conv, di), 1.0 / np.sqrt(cfg.ssm_conv)),
+        "conv_b": truncated_normal(jax.random.fold_in(ks[7], 1),
+                                   (cfg.ssm_conv, n), 1.0 / np.sqrt(cfg.ssm_conv)),
+        "conv_c": truncated_normal(jax.random.fold_in(ks[7], 2),
+                                   (cfg.ssm_conv, n), 1.0 / np.sqrt(cfg.ssm_conv)),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),
+        "norm": jnp.ones((di,), jnp.float32),
+        "w_out": truncated_normal(jax.random.fold_in(ks[0], 9), (di, d),
+                                  1.0 / np.sqrt(di)),
+    }
+
+
+def spec_ssm() -> dict:
+    return {
+        "w_z": ("embed", "conv_dim"), "w_x": ("embed", "conv_dim"),
+        "w_b": ("embed", None), "w_c": ("embed", None),
+        "w_dt": ("embed", "ssm_heads"),
+        "conv_x": (None, "conv_dim"), "conv_b": (None, None),
+        "conv_c": (None, None),
+        "a_log": ("ssm_heads",), "d_skip": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",), "norm": ("conv_dim",),
+        "w_out": ("conv_dim", "embed"),
+    }
+
+
+def _causal_conv(seq: Array, w: Array, state: Array | None = None):
+    """Depthwise causal conv along axis 1.  seq [B,S,C]; w [K,C]."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((seq.shape[0], k - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = state.astype(seq.dtype)  # [B, K-1, C] history
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i].astype(seq.dtype)
+              for i in range(k))
+    new_state = full[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _project(params, cfg: ModelConfig, u: Array):
+    dt_ = u.dtype
+    z = jnp.einsum("bsd,de->bse", u, params["w_z"].astype(dt_))
+    x = jnp.einsum("bsd,de->bse", u, params["w_x"].astype(dt_))
+    bb = jnp.einsum("bsd,dn->bsn", u, params["w_b"].astype(dt_))
+    cc = jnp.einsum("bsd,dn->bsn", u, params["w_c"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", u, params["w_dt"].astype(dt_))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    return z, x, bb, cc, dt
+
+
+def _gated_out(params, cfg: ModelConfig, y: Array, z: Array) -> Array:
+    di = cfg.d_inner
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + 1e-5) * params["norm"]).astype(z.dtype)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(z.dtype))
+
+
+def ssm_block(params: dict, cfg: ModelConfig, u: Array,
+              return_cache: bool = False):
+    """Chunked SSD scan over the full sequence.  u: [B, S, D]."""
+    b, s, _ = u.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    q = min(cfg.ssm_chunk, s)
+    if s % q:
+        raise ValueError(f"seq {s} not divisible by ssm_chunk {q}")
+    nc = s // q
+
+    z, x, bb, cc, dt = _project(params, cfg, u)
+    kc = cfg.ssm_conv
+    conv_tails = {"conv_x": x[:, -(kc - 1):], "conv_b": bb[:, -(kc - 1):],
+                  "conv_c": cc[:, -(kc - 1):]}
+    x, _ = _causal_conv(x, params["conv_x"])
+    bb, _ = _causal_conv(bb, params["conv_b"])
+    cc, _ = _causal_conv(cc, params["conv_c"])
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))        # [H]
+    da = dt * a                                               # [B,S,H] (<=0)
+    xh = x.reshape(b, nc, q, h, p)
+    xh = constrain(xh, "batch", None, None, "ssm_heads", None)
+    bc = bb.reshape(b, nc, q, n)
+    ccc = cc.reshape(b, nc, q, n)
+    dac = da.reshape(b, nc, q, h)
+    dtc = dt.reshape(b, nc, q, h)
+
+    cum = jnp.cumsum(dac, axis=2)                             # [B,nc,Q,H]
+    seg_sum = cum[:, :, -1]                                   # [B,nc,H]
+
+    # ---- within-chunk (dual / attention-like) term ----
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # [B,nc,Qi,Qj,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_kernel = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", ccc, bc).astype(jnp.float32)
+    w = scores[..., None] * l_kernel * dtc[:, :, None]        # [B,nc,Qi,Qj,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(u.dtype), xh)
+
+    # ---- chunk boundary states + inter-chunk recurrence ----
+    decay_to_end = jnp.exp(seg_sum[:, :, None] - cum)         # [B,nc,Q,H]
+    chunk_states = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchnp",
+        bc.astype(jnp.float32), (dtc * decay_to_end), xh.astype(jnp.float32))
+
+    def scan_fn(state, inp):
+        cs, seg = inp                                         # [B,H,N,P], [B,H]
+        out_state = state                                      # state BEFORE chunk
+        new_state = state * jnp.exp(seg)[..., None, None] + cs
+        return new_state, out_state
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (chunk_states.transpose(1, 0, 2, 3, 4), seg_sum.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # [B,nc,H,N,P]
+
+    decay_from_start = jnp.exp(cum)                           # [B,nc,Q,H]
+    y_inter = jnp.einsum(
+        "bcqn,bchnp->bcqhp", ccc.astype(jnp.float32), prev_states)
+    y_inter = y_inter * decay_from_start[..., None]
+
+    y = y_intra.astype(jnp.float32) + y_inter
+    y = y + xh.astype(jnp.float32) * params["d_skip"][:, None]
+    y = y.reshape(b, s, h * p).astype(u.dtype)
+    out = _gated_out(params, cfg, y, z)
+    if return_cache:
+        return out, {"state": final_state, **conv_tails}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    k = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv_x": jnp.zeros((batch, k - 1, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, k - 1, n), dtype),
+        "conv_c": jnp.zeros((batch, k - 1, n), dtype),
+    }
+
+
+def spec_ssm_cache() -> dict:
+    return {"state": ("batch", "ssm_heads", None, None),
+            "conv_x": ("batch", None, "conv_dim"),
+            "conv_b": ("batch", None, None),
+            "conv_c": ("batch", None, None)}
+
+
+def ssm_decode_step(params: dict, cfg: ModelConfig, u: Array,
+                    cache: dict) -> tuple[Array, dict]:
+    """One-token recurrent update.  u: [B, 1, D]."""
+    b = u.shape[0]
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, x, bb, cc, dt = _project(params, cfg, u)
+    x, ncx = _causal_conv(x, params["conv_x"], cache["conv_x"])
+    bb, ncb = _causal_conv(bb, params["conv_b"], cache["conv_b"])
+    cc, ncc = _causal_conv(cc, params["conv_c"], cache["conv_c"])
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0] * a)                                # [B,H]
+    xh = x.reshape(b, h, p).astype(jnp.float32)
+    binp = bb[:, 0].astype(jnp.float32)                       # [B,N]
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", binp, dt[:, 0], xh)
+    y = jnp.einsum("bn,bhnp->bhp", cc[:, 0].astype(jnp.float32), state)
+    y = y + xh * params["d_skip"][:, None]
+    y = y.reshape(b, 1, h * p).astype(u.dtype)
+    out = _gated_out(params, cfg, y, z)
+    new_cache = {"state": state, "conv_x": ncx, "conv_b": ncb, "conv_c": ncc}
+    return out, new_cache

@@ -1,0 +1,6 @@
+"""Optimizers: AdamW (sharded states), SGD, schedules, DSPSA bridge."""
+
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedules import cosine_schedule, linear_warmup
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "linear_warmup"]

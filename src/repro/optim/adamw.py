@@ -1,0 +1,96 @@
+"""AdamW with sharded optimizer state and optional gradient compression.
+
+Distributed-optimization features:
+  * moments inherit the parameter sharding; the ``moment_dtype`` knob
+    (bf16 for the 400B config) halves optimizer memory;
+  * optional bf16 gradient compression before the DP all-reduce (grads are
+    cast before the psum GSPMD inserts, halving gradient collective bytes),
+    accumulated back into f32 for the update;
+  * global-norm clipping computed in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class OptState:
+    step: Array
+    m: Any
+    v: Any
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.step, s.m, s.v), None),
+    lambda aux, children: OptState(*children))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[Array], Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+    grad_compression: bool = False  # bf16 grads across the DP all-reduce
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moment_dtype)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(zeros, params),
+                        v=jax.tree.map(zeros, params))
+
+    def state_specs(self, param_specs):
+        """Moment sharding = param sharding (ZeRO-style inherited specs)."""
+        return OptState(step=(), m=param_specs, v=param_specs)
+
+    def compress_grads(self, grads):
+        if not self.grad_compression:
+            return grads
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+    def update(self, params, grads, state: OptState):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm > 0:
+            gsq = jax.tree.reduce(
+                lambda a, g: a + jnp.sum(g * g), grads, jnp.zeros((), jnp.float32))
+            gnorm = jnp.sqrt(gsq)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            mf = m.astype(jnp.float32) * b1 + (1 - b1) * g
+            vf = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+            mh = mf / bc1
+            vh = vf / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (new_p.astype(p.dtype), mf.astype(self.moment_dtype),
+                    vf.astype(self.moment_dtype))
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = treedef.unflatten([l[0] for l in leaves])
+        new_m = treedef.unflatten([l[1] for l in leaves])
+        new_v = treedef.unflatten([l[2] for l in leaves])
+        return new_params, OptState(step=step, m=new_m, v=new_v), gnorm

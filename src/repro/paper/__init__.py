@@ -1,0 +1,8 @@
+"""Paper reproduction applications (Secs. III-V)."""
+
+from repro.paper.rfnn2x2 import RFNN2x2, train_rfnn2x2
+from repro.paper.mnist_rfnn import MnistRFNN, train_mnist
+from repro.paper.efficiency import table2_rows
+
+__all__ = ["RFNN2x2", "train_rfnn2x2", "MnistRFNN", "train_mnist",
+           "table2_rows"]

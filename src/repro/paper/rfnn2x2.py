@@ -1,0 +1,141 @@
+"""The 2x2 RFNN binary classifier (paper Sec. IV-A, Figs. 7-12).
+
+Forward path (Eqs. 19-21):
+    [z1, z2]^T = t(theta, phi) [x1, x2]^T      (the device)
+    z_out = w1 |z1| + w2 |z2| + b              (post-processing)
+    y_hat = sigmoid(z_out)
+
+The device phases are the 36 discrete Table-I states; digital parameters
+(w1, w2, b) train with SGD and the device biasing codes with either
+exhaustive 6-state search over theta (what the trained network in Fig. 9/10
+effectively selects) or DSPSA (Algorithm I).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dspsa as dspsa_lib
+from repro.core.cell import TABLE_I_PHASES_RAD
+from repro.core.hardware import HardwareModel, detect_magnitude, imperfect_cell_matrix
+from repro.data.toys import GAMMA
+from repro.paper.prototype import PROTOTYPE
+
+
+@dataclasses.dataclass
+class RFNN2x2:
+    """The device + post-processing pipeline of Fig. 11."""
+
+    hardware: HardwareModel = PROTOTYPE
+    gamma: float = GAMMA
+
+    def device_output(self, theta_code, phi_code, x, key=None):
+        """Measured |V| at (P2, P3) for inputs x [N, 2] (volts, unscaled)."""
+        theta = jnp.take(jnp.asarray(TABLE_I_PHASES_RAD, jnp.float32),
+                         theta_code)
+        phi = jnp.take(jnp.asarray(TABLE_I_PHASES_RAD, jnp.float32), phi_code)
+        t = imperfect_cell_matrix(theta, phi, self.hardware, key)
+        # feed V1+ = x[:,1] (y-axis), V4+ = x[:,0] (x-axis) per Fig. 9 axes
+        vin = jnp.stack([x[:, 1], x[:, 0]], axis=-1).astype(jnp.complex64)
+        vin = vin * self.gamma
+        vout = vin @ t.T
+        mag = detect_magnitude(vout, self.hardware,
+                               key if key is None else jax.random.fold_in(key, 1))
+        return mag / self.gamma  # post scaling back (Fig. 11)
+
+    def predict(self, params, theta_code, phi_code, x, key=None):
+        mag = self.device_output(theta_code, phi_code, x, key)
+        z = mag @ params["w"] + params["b"]
+        return jax.nn.sigmoid(z)
+
+
+def _train_post(net, theta_code, phi_code, x, y, *, steps=500, lr=0.1,
+                batch=32, seed=0):
+    """Adaptive-gradient SGD on the digital post-processing (w1, w2, b) —
+    the paper's stochastic optimization with dynamic learning-rate bound
+    (refs [40][41])."""
+    key = jax.random.PRNGKey(seed)
+    params = {"w": 0.1 * jax.random.normal(key, (2,)), "b": jnp.zeros(())}
+    mag = net.device_output(theta_code, phi_code, jnp.asarray(x))  # fixed dev
+
+    def loss_fn(p, m, yy):
+        z = m @ p["w"] + p["b"]
+        yhat = jax.nn.sigmoid(z)
+        eps = 1e-7
+        return -jnp.mean(yy * jnp.log(yhat + eps)
+                         + (1 - yy) * jnp.log(1 - yhat + eps))
+
+    grad = jax.jit(jax.value_and_grad(loss_fn))
+    m_t = jax.tree.map(jnp.zeros_like, params)
+    v_t = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    n = len(x)
+    rng = np.random.default_rng(seed)
+    yj = jnp.asarray(y, jnp.float32)
+    for s in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        _, g = grad(params, mag[idx], yj[idx])
+        m_t = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m_t, g)
+        v_t = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v_t, g)
+        t = s + 1.0
+        params = jax.tree.map(
+            lambda p, mm, vv: p - lr * (mm / (1 - b1**t))
+            / (jnp.sqrt(vv / (1 - b2**t)) + eps), params, m_t, v_t)
+    final_loss = float(loss_fn(params, mag, yj))
+    return params, final_loss
+
+
+def accuracy(net, params, theta_code, phi_code, x, y):
+    yhat = net.predict(params, theta_code, phi_code, jnp.asarray(x))
+    return float(jnp.mean((yhat >= 0.5) == jnp.asarray(y, bool)))
+
+
+def train_rfnn2x2(x, y, *, method: str = "search", hardware=PROTOTYPE,
+                  steps=300, seed=0):
+    """Full Algorithm-I style training.  Returns (net, params, codes, info).
+
+    method 'search': exhaustive over the 6 theta states (phi fixed at L6 as
+    in Fig. 9); 'dspsa': discrete optimization over (theta, phi) codes with
+    SGD-trained post-processing per evaluation (two-measurement DSPSA).
+    """
+    net = RFNN2x2(hardware=hardware)
+    if method == "search":
+        best = None
+        for tc in range(6):
+            params, loss = _train_post(net, tc, 5, x, y, steps=steps,
+                                       seed=seed)
+            acc = accuracy(net, params, tc, 5, x, y)
+            if best is None or acc > best[0]:
+                best = (acc, tc, params)
+        acc, tc, params = best
+        return net, params, {"theta": tc, "phi": 5}, {"train_acc": acc}
+
+    # DSPSA over device codes; short SGD per loss evaluation
+    def device_loss(codes):
+        params, loss = _train_post(net, int(codes["theta"]), int(codes["phi"]),
+                                   x, y, steps=80, seed=seed)
+        return loss
+
+    codes0 = {"theta": jnp.asarray(2, jnp.int32),
+              "phi": jnp.asarray(2, jnp.int32)}
+    best_codes, hist = dspsa_lib.minimize(
+        jax.random.PRNGKey(seed), codes0, device_loss,
+        dspsa_lib.DSPSAConfig(a=1.5, n_states=6), steps=12)
+    tc, pc = int(best_codes["theta"]), int(best_codes["phi"])
+    params, _ = _train_post(net, tc, pc, x, y, steps=steps, seed=seed)
+    return net, params, {"theta": tc, "phi": pc}, {
+        "train_acc": accuracy(net, params, tc, pc, x, y),
+        "dspsa_history": hist}
+
+
+def decision_map(net, params, theta_code, phi_code, lim=30.0, n=41):
+    """y_hat over the input plane — the Fig. 9/10 maps."""
+    g = np.linspace(0, lim, n)
+    xx, yy = np.meshgrid(g, g)
+    pts = np.stack([xx.reshape(-1), yy.reshape(-1)], axis=1).astype(np.float32)
+    z = net.predict(params, theta_code, phi_code, jnp.asarray(pts))
+    return g, np.asarray(z).reshape(n, n)

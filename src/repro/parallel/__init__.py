@@ -1,0 +1,15 @@
+"""Distribution utilities: logical-axis sharding rules, mesh context."""
+
+from repro.parallel.sharding import (
+    ShardingRules,
+    active_mesh,
+    constrain,
+    logical_spec,
+    set_rules,
+    use_mesh_and_rules,
+)
+
+__all__ = [
+    "ShardingRules", "active_mesh", "constrain", "logical_spec",
+    "set_rules", "use_mesh_and_rules",
+]

@@ -1,0 +1,9 @@
+"""Fault-tolerance runtime: straggler monitor, elastic re-meshing, failure
+injection for tests, and the supervised training driver."""
+
+from repro.runtime.elastic import RecoveryPlan, plan_recovery
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.failures import FailureInjector
+
+__all__ = ["RecoveryPlan", "plan_recovery", "StragglerMonitor",
+           "FailureInjector"]

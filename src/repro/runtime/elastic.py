@@ -1,0 +1,65 @@
+"""Elastic scaling: plan a degraded mesh after host/pod failures.
+
+Given the surviving chip count (and topology constraints), choose the
+largest valid production mesh and the config adjustments needed to resume:
+
+  * losing a full pod: 512 -> 256 drops the "pod" axis (the multi-pod mesh
+    degrades to the single-pod mesh; DP halves, grad-accum doubles to keep
+    the global batch);
+  * losing k hosts inside a pod: the data axis shrinks to the largest
+    divisor that the surviving hosts tile (model axis is kept at 16 — TP
+    rewiring is a different physical ICI ring and not generally survivable);
+  * below a floor, training pauses for operator intervention.
+
+The plan is pure data — the driver applies it by rebuilding the mesh,
+resharding the restored checkpoint (params are saved with logical specs, so
+resharding is re-`device_put`), and resuming from the last durable step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+HOST_CHIPS = 4          # v5e: 4 chips per host
+MODEL_AXIS = 16         # TP degree is fixed by the ICI ring
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPlan:
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    dp_shards: int
+    accum_multiplier: int      # scale grad-accum to preserve global batch
+    dropped_chips: int
+    viable: bool
+    reason: str = ""
+
+    @property
+    def chips(self) -> int:
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        return n
+
+
+def plan_recovery(surviving_chips: int, *, original_chips: int = 512,
+                  min_data: int = 4) -> RecoveryPlan:
+    """Largest valid (pod, data, model) mesh within the surviving fleet."""
+    if surviving_chips >= 512:
+        return RecoveryPlan((2, 16, 16), ("pod", "data", "model"), 32, 1,
+                            surviving_chips - 512, True)
+    # try single-pod-equivalent meshes with shrinking data axis
+    for data in (16, 12, 8, 6, 4):
+        chips = data * MODEL_AXIS
+        if chips <= surviving_chips and data >= min_data:
+            dp = data
+            accum = max(1, 32 // dp)  # original multi-pod DP was 32
+            return RecoveryPlan((data, MODEL_AXIS), ("data", "model"), dp,
+                                accum, surviving_chips - chips, True)
+    return RecoveryPlan((), (), 0, 0, surviving_chips, False,
+                        reason=f"only {surviving_chips} chips alive; "
+                               f"need >= {min_data * MODEL_AXIS}")
+
+
+def hosts_to_chips(surviving_hosts: int) -> int:
+    return surviving_hosts * HOST_CHIPS

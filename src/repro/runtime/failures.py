@@ -1,0 +1,44 @@
+"""Failure injection for fault-tolerance tests.
+
+Simulates the failure modes a 1000-node fleet actually sees, on a schedule,
+so the driver's recovery path is exercised deterministically in CI:
+
+  * ``host_down``  — a host stops heartbeating (drop its chips);
+  * ``straggler``  — a host's step time inflates by a factor;
+  * ``crash``      — the training process dies mid-step (tests restart
+    from checkpoint + exact data-stream resume).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Failure:
+    step: int
+    kind: str              # host_down | straggler | crash
+    host: int = 0
+    factor: float = 5.0    # straggler slowdown
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    schedule: list[Failure]
+    down_hosts: set = dataclasses.field(default_factory=set)
+    slow_hosts: dict = dataclasses.field(default_factory=dict)
+
+    def at_step(self, step: int) -> list[Failure]:
+        fired = [f for f in self.schedule if f.step == step]
+        for f in fired:
+            if f.kind == "host_down":
+                self.down_hosts.add(f.host)
+            elif f.kind == "straggler":
+                self.slow_hosts[f.host] = f.factor
+        return fired
+
+    def step_time(self, host: int, base: float) -> float:
+        return base * self.slow_hosts.get(host, 1.0)
+
+    def alive(self, num_hosts: int) -> list[int]:
+        return [h for h in range(num_hosts) if h not in self.down_hosts]

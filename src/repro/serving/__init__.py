@@ -1,0 +1,5 @@
+"""Serving runtime: continuous batching over the prefill/decode steps."""
+
+from repro.serving.batcher import ContinuousBatcher, Request
+
+__all__ = ["ContinuousBatcher", "Request"]

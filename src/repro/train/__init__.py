@@ -1,0 +1,5 @@
+"""Training loop: step functions, microbatching, metrics."""
+
+from repro.train.step import TrainState, make_train_step
+
+__all__ = ["TrainState", "make_train_step"]

@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs (full configs are exercised only by
+the dry-run via ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import Model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = configs.list_archs()
+
+
+def make_batch(cfg, key, b=2, s=16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (b, s), 0, cfg.vocab_size)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], -jnp.ones((b, 1), jnp.int32)], axis=1)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.family == "vlm":
+        batch["vis_embed"] = 0.02 * jax.random.normal(
+            k2, (b, cfg.n_vis_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = 0.02 * jax.random.normal(
+            k3, (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_shapes_and_finite(arch):
+    cfg = configs.get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = model.forward(params, batch)
+    s_out = batch["tokens"].shape[1] + (
+        cfg.n_vis_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, s_out, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    """One SGD step must run and reduce nothing to NaN."""
+    cfg = configs.get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        return model.loss(p, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+    loss2 = float(loss_fn(new_params))
+    assert np.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_metadata(arch):
+    """Full configs: exact assigned hyperparameters, sane param counts."""
+    cfg = configs.get_config(arch)
+    assert cfg.name == arch
+    expected = {
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "mamba2-780m": (48, 1536, None, None, None, 50280),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+    }[arch]
+    layers, d, h, kv, ff, vocab = expected
+    assert cfg.n_layers == layers and cfg.d_model == d
+    assert cfg.vocab_size == vocab
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    if ff is not None:
+        ff_actual = cfg.d_ff_expert if arch == "qwen2-moe-a2.7b" else cfg.d_ff
+        assert ff_actual == ff
+
+
+def test_param_counts_match_names():
+    budgets = {  # (min, max) in billions, total params
+        "tinyllama-1.1b": (1.0, 1.2),
+        "zamba2-1.2b": (1.0, 1.4),
+        "mamba2-780m": (0.75, 0.95),
+        "gemma-2b": (2.0, 2.8),
+        "granite-3-2b": (2.0, 2.8),
+        "internvl2-2b": (1.6, 2.2),
+        "llama3.2-3b": (3.0, 3.8),
+        "whisper-large-v3": (1.4, 1.8),
+        "llama4-maverick-400b-a17b": (380.0, 420.0),
+    }
+    for arch, (lo, hi) in budgets.items():
+        n = configs.get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+    active = configs.get_config("qwen2-moe-a2.7b").active_param_count() / 1e9
+    assert 2.4 <= active <= 3.0  # A2.7B
+    active4 = configs.get_config(
+        "llama4-maverick-400b-a17b").active_param_count() / 1e9
+    assert 12.0 <= active4 <= 20.0  # A17B
+
+
+def test_grid_has_32_live_cells():
+    assert len(configs.grid()) == 32
+    assert ("mamba2-780m", "long_500k") in configs.grid()
+    assert ("gemma-2b", "long_500k") not in configs.grid()

@@ -1,0 +1,85 @@
+"""Unit + property tests for the 2x2 cell physics (paper Sec. II)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cell
+
+jax.config.update("jax_platform_name", "cpu")
+
+angles = st.floats(min_value=0.0, max_value=2 * np.pi, allow_nan=False)
+
+
+def test_structural_equals_closed_form():
+    th = jnp.linspace(0, 2 * np.pi, 17)
+    ph = jnp.linspace(0, 2 * np.pi, 17)
+    t1 = cell.cell_matrix(th, ph)
+    t2 = cell.cell_matrix_structural(th, ph)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(theta=angles, phi=angles)
+def test_cell_is_unitary(theta, phi):
+    t = cell.cell_matrix(jnp.float32(theta), jnp.float32(phi))
+    assert bool(cell.is_unitary(t))
+
+
+@settings(max_examples=25, deadline=None)
+@given(theta=angles, phi=angles, p1=st.floats(1e-6, 1e-2), p4=st.floats(1e-6, 1e-2))
+def test_power_conservation(theta, phi, p1, p4):
+    """Eq. 16/17: P2 + P3 = P1 + P4 for the lossless cell."""
+    p2, p3 = cell.output_powers(jnp.float32(theta), jnp.float32(phi), p1, p4)
+    np.testing.assert_allclose(float(p2 + p3), p1 + p4, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(theta=angles, p1=st.floats(1e-6, 1e-2), p4=st.floats(1e-6, 1e-2))
+def test_closed_form_powers(theta, p1, p4):
+    """Eqs. (14-15) computed from S-params match Eqs. (16-17)."""
+    pa2, pa3 = cell.output_powers(jnp.float32(theta), 0.0, p1, p4)
+    pb2, pb3 = cell.output_powers_closed_form(jnp.float32(theta), p1, p4)
+    np.testing.assert_allclose(float(pa2), float(pb2), rtol=1e-3, atol=1e-9)
+    np.testing.assert_allclose(float(pa3), float(pb3), rtol=1e-3, atol=1e-9)
+
+
+def test_cross_and_bar_states():
+    """theta=0 -> cross state (input 1 -> output 3); theta=pi -> bar state."""
+    s = cell.s_parameters(jnp.float32(0.0), jnp.float32(0.0))
+    assert abs(float(jnp.abs(s["s21"]))) < 1e-6      # no through
+    assert abs(float(jnp.abs(s["s31"])) - 1.0) < 1e-6  # full cross
+    s = cell.s_parameters(jnp.float32(np.pi), jnp.float32(0.0))
+    assert abs(float(jnp.abs(s["s21"])) - 1.0) < 1e-6  # full through
+    assert abs(float(jnp.abs(s["s31"]))) < 1e-6
+
+
+def test_phi_only_shifts_port2_phase():
+    """Paper: phi adds phase at P2 and does not affect magnitudes."""
+    th = jnp.float32(1.1)
+    s0 = cell.s_parameters(th, jnp.float32(0.0))
+    s1 = cell.s_parameters(th, jnp.float32(0.7))
+    for k in ("s21", "s24", "s31", "s34"):
+        np.testing.assert_allclose(float(jnp.abs(s0[k])), float(jnp.abs(s1[k])),
+                                   atol=1e-6)
+    d21 = float(jnp.angle(s1["s21"]) - jnp.angle(s0["s21"]))
+    d31 = float(jnp.angle(s1["s31"]) - jnp.angle(s0["s31"]))
+    assert abs((d21 + 0.7 + np.pi) % (2 * np.pi) - np.pi) < 1e-5
+    assert abs(d31) < 1e-6
+
+
+def test_table_i_constants():
+    assert len(cell.TABLE_I_PHASES_DEG) == cell.N_DISCRETE_STATES == 6
+    assert cell.TABLE_I_PHASES_DEG[0] == 29.0
+    assert cell.TABLE_I_PHASES_DEG[-1] == 154.0
+
+
+def test_complementary_power_split():
+    """Fig. 3(d): P2 max where P3 min, sweeping theta."""
+    th = jnp.linspace(0, 2 * np.pi, 201)
+    p2, p3 = cell.output_powers_closed_form(th, 0.5e-3, 1.5e-3)
+    tot = np.asarray(p2 + p3)
+    np.testing.assert_allclose(tot, 2e-3, rtol=1e-5)
+    assert abs(int(jnp.argmax(p2)) - int(jnp.argmin(p3))) <= 1

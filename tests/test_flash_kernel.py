@@ -1,0 +1,73 @@
+"""Pallas flash-attention kernel: shape/dtype/block sweeps vs dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _qkv(key, b, h, s, hd, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (jax.random.normal(k1, (b, h, s, hd), dtype),
+            jax.random.normal(k2, (b, h, s, hd), dtype),
+            jax.random.normal(k3, (b, h, s, hd), dtype))
+
+
+@pytest.mark.parametrize("s,hd,bq,bk", [
+    (64, 32, 16, 16), (128, 64, 32, 32), (128, 64, 64, 32),
+    (256, 128, 128, 128),
+])
+def test_flash_matches_dense(s, hd, bq, bk):
+    q, k, v = _qkv(jax.random.PRNGKey(s + hd), 2, 2, s, hd)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_non_causal():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 2, 64, 32)
+    out = flash_attention(q, k, v, causal=False, bq=16, bk=32)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 2, 64, 32, jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)
+
+
+def test_flash_causality():
+    """Future keys must not influence earlier queries."""
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 1, 64, 32)
+    out1 = flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    k2 = k.at[:, :, -1].set(99.0)
+    v2 = v.at[:, :, -1].set(-99.0)
+    out2 = flash_attention(q, k2, v2, causal=True, bq=16, bk=16)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :-1]),
+                               np.asarray(out2[:, :, :-1]), atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       s=st.sampled_from([32, 64]),
+       hd=st.sampled_from([16, 32]))
+def test_flash_property(seed, s, hd):
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 1, 2, s, hd)
+    out = flash_attention(q, k, v, causal=True, bq=16, bk=16)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_rejects_bad_blocks():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 1, 96, 32)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, bq=64, bk=64)  # 96 % 64 != 0

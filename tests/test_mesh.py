@@ -1,0 +1,112 @@
+"""Tests for mesh composition, programming and SVD synthesis (Sec. IV-B)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decompose, mesh, svd_synthesis
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 12])
+def test_clements_plan_cell_count(n):
+    plan = mesh.clements_plan(n)
+    assert plan.n_cells == n * (n - 1) // 2
+    assert plan.n_columns == n
+
+
+def test_paper_8x8_uses_28_cells():
+    """Paper Sec. IV-B: the 8x8 processor is built from 28 unit cells."""
+    assert mesh.clements_plan(8).n_cells == 28
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_random_mesh_is_unitary(n):
+    plan = mesh.clements_plan(n)
+    params = mesh.init_mesh_params(jax.random.PRNGKey(n), plan)
+    assert mesh.mesh_is_unitary(plan, params)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mesh_preserves_norm(seed):
+    """Unitarity as energy conservation on random inputs."""
+    plan = mesh.clements_plan(8)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    params = mesh.init_mesh_params(k1, plan)
+    x = jax.random.normal(k2, (3, 8)) + 1j * jax.random.normal(k2, (3, 8))
+    y = mesh.apply_mesh(plan, params, x.astype(jnp.complex64))
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_reck_program_reconstructs(n):
+    u = decompose.random_unitary(n, seed=n)
+    plan, params = decompose.reck_program(u)
+    assert plan.n_cells == n * (n - 1) // 2
+    assert decompose.reconstruction_error(plan, params, u) < 5e-6
+
+
+def test_reck_depth_is_triangular():
+    plan, _ = decompose.reck_program(decompose.random_unitary(8, 1))
+    assert plan.n_columns == 2 * 8 - 3
+
+
+def test_reck_rejects_nonunitary():
+    with pytest.raises(ValueError):
+        decompose.reck_program(np.ones((4, 4)))
+
+
+def test_fit_program_rectangle():
+    """Clements rectangle programmed stochastically (the paper's method)."""
+    u = decompose.random_unitary(4, seed=3)
+    plan, params, err = decompose.fit_program(u, steps=2000, lr=0.05, seed=0)
+    assert err < 1e-2
+    assert "alpha" in params and "alpha_in" in params
+
+
+def test_output_screen_only_is_not_universal():
+    """Finding (DESIGN.md): the single-phase cell + output-only Sigma cannot
+    realize an arbitrary unitary; the input screen restores universality."""
+    u = decompose.random_unitary(4, seed=3)
+    errs = [decompose.fit_program(u, steps=1200, lr=0.05, seed=s,
+                                  with_input_screen=False)[2]
+            for s in range(2)]
+    assert min(errs) > 5e-2  # consistently stuck without the input screen
+
+
+@pytest.mark.parametrize("shape", [(2, 2), (3, 5), (5, 3), (8, 8)])
+def test_svd_synthesis_arbitrary_matrix(shape):
+    rng = np.random.default_rng(0)
+    m = rng.normal(size=shape)
+    syn = svd_synthesis.synthesize(m)
+    assert svd_synthesis.synthesis_error(m, syn) < 1e-4
+    # attenuation realizable passively
+    assert float(jnp.max(syn.attenuation)) <= 1.0 + 1e-6
+
+
+def test_svd_synthesis_complex_matrix():
+    rng = np.random.default_rng(1)
+    m = rng.normal(size=(4, 4)) + 1j * rng.normal(size=(4, 4))
+    syn = svd_synthesis.synthesize(m)
+    assert svd_synthesis.synthesis_error(m, syn) < 1e-4
+
+
+def test_apply_mesh_batch_shapes():
+    plan = mesh.clements_plan(4)
+    params = mesh.init_mesh_params(jax.random.PRNGKey(0), plan)
+    for shape in [(4,), (3, 4), (2, 5, 4)]:
+        y = mesh.apply_mesh(plan, params, jnp.ones(shape, jnp.complex64))
+        assert y.shape == shape
+
+
+def test_apply_mesh_rejects_bad_dim():
+    plan = mesh.clements_plan(4)
+    params = mesh.init_mesh_params(jax.random.PRNGKey(0), plan)
+    with pytest.raises(ValueError):
+        mesh.apply_mesh(plan, params, jnp.ones((3, 6), jnp.complex64))

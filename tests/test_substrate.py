@@ -1,0 +1,239 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, fault tolerance."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import TokenStream, load_digits, make_toy_dataset
+from repro.optim import AdamW
+from repro.runtime import (
+    FailureInjector,
+    RecoveryPlan,
+    StragglerMonitor,
+    plan_recovery,
+)
+from repro.runtime.failures import Failure
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    state = opt.init(params)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_adamw_clip_norm():
+    opt = AdamW(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, gnorm = opt.update(params, {"w": jnp.asarray([3.0, 4.0, 0.0])}, state)
+    np.testing.assert_allclose(float(gnorm), 5.0, rtol=1e-5)
+
+
+def test_adamw_bf16_moments_and_compression():
+    opt = AdamW(lr=0.01, moment_dtype=jnp.bfloat16, grad_compression=True)
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    assert state.m["w"].dtype == jnp.bfloat16
+    g = opt.compress_grads({"w": jnp.ones((4, 4))})
+    assert g["w"].dtype == jnp.bfloat16
+    params, state, _ = opt.update(params, g, state)
+    assert bool(jnp.isfinite(params["w"]).all())
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_token_stream_deterministic_resume():
+    """Restarting at step k reproduces exactly the same batch k."""
+    a = TokenStream(vocab_size=100, seq_len=32, global_batch=4, seed=7)
+    b = TokenStream(vocab_size=100, seq_len=32, global_batch=4, seed=7)
+    for step in (0, 3, 11):
+        np.testing.assert_array_equal(a.batch(step)["tokens"],
+                                      b.batch(step)["tokens"])
+
+
+def test_token_stream_host_sharding():
+    full = TokenStream(vocab_size=100, seq_len=16, global_batch=8, seed=1)
+    h0 = TokenStream(vocab_size=100, seq_len=16, global_batch=8, seed=1,
+                     host_id=0, num_hosts=2)
+    h1 = TokenStream(vocab_size=100, seq_len=16, global_batch=8, seed=1,
+                     host_id=1, num_hosts=2)
+    got = np.concatenate([h0.batch(5)["tokens"], h1.batch(5)["tokens"]])
+    np.testing.assert_array_equal(got, full.batch(5)["tokens"])
+
+
+def test_token_stream_labels_are_shifted():
+    s = TokenStream(vocab_size=50, seq_len=16, global_batch=2)
+    b = s.batch(0)
+    rng = np.random.default_rng((0, 0))
+    row = s._gen_row(rng)
+    np.testing.assert_array_equal(b["tokens"][0], row[:-1])
+    np.testing.assert_array_equal(b["labels"][0], row[1:])
+
+
+def test_digits_dataset():
+    x_tr, y_tr, x_te, y_te = load_digits(n_train=100, n_test=40, seed=0)
+    assert x_tr.shape == (100, 784) and x_te.shape == (40, 784)
+    assert 0.0 <= x_tr.min() and x_tr.max() <= 1.0
+    assert set(np.unique(y_tr)) == set(range(10))
+    # deterministic
+    x2, *_ = load_digits(n_train=100, n_test=40, seed=0)
+    np.testing.assert_array_equal(x_tr, x2)
+
+
+@pytest.mark.parametrize("case", ["corner", "diag_up", "diag_down", "ring"])
+def test_toy_datasets(case):
+    x, y = make_toy_dataset(case, n=200)
+    assert x.shape == (200, 2) and set(np.unique(y)) <= {0, 1}
+    assert 0.05 < y.mean() < 0.95  # both classes present
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 3)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(10, tree, data_step=123)
+    restored, meta = mgr.restore(None, like=jax.tree.map(jnp.zeros_like, tree))
+    assert meta == {"step": 10, "data_step": 123}
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, restored)
+
+
+def test_checkpoint_async_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3):
+        mgr.save_async(s, _tree(s))
+    mgr.wait()
+    assert mgr.latest_step() == 3
+    assert mgr.all_steps() == [2, 3]  # retention dropped step 1
+
+
+def test_checkpoint_detects_structure_mismatch(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    with pytest.raises(ValueError, match="mismatch"):
+        mgr.restore(1, like={"different": jnp.zeros(3)})
+
+
+def test_checkpoint_crash_mid_save_is_recoverable(tmp_path):
+    """A stale .tmp dir (simulated crash) must not break save/restore."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    # simulate a crash that left a partial tmp dir for step 2
+    (tmp_path / "step_00000002.tmp").mkdir()
+    (tmp_path / "step_00000002.tmp" / "garbage").write_text("x")
+    assert mgr.latest_step() == 1
+    mgr.save(2, _tree(2))  # must clean up and succeed
+    assert mgr.latest_step() == 2
+
+
+def test_checkpoint_resume_matches_uninterrupted_training(tmp_path):
+    """Crash/restart: resumed run == uninterrupted run, bit-exact."""
+    opt = AdamW(lr=0.05)
+    stream = TokenStream(vocab_size=10, seq_len=4, global_batch=2, seed=3)
+
+    def step_fn(params, state, batch):
+        grads = {"w": params["w"] * 0.1
+                 + jnp.float32(batch["tokens"].sum() % 7)}
+        return opt.update(params, grads, state)[:2]
+
+    # uninterrupted 6 steps
+    params = {"w": jnp.ones(3)}
+    state = opt.init(params)
+    for i in range(6):
+        params, state = step_fn(params, state, stream.batch(i))
+    ref = np.asarray(params["w"])
+
+    # interrupted at step 3 + restored
+    mgr = CheckpointManager(tmp_path)
+    params = {"w": jnp.ones(3)}
+    state = opt.init(params)
+    for i in range(3):
+        params, state = step_fn(params, state, stream.batch(i))
+    mgr.save(3, {"params": params, "opt": state}, data_step=3)
+    del params, state
+    restored, meta = mgr.restore(None, like={
+        "params": {"w": jnp.zeros(3)},
+        "opt": opt.init({"w": jnp.zeros(3)})})
+    params, state = restored["params"], restored["opt"]
+    for i in range(meta["data_step"], 6):
+        params, state = step_fn(params, state, stream.batch(i))
+    np.testing.assert_array_equal(np.asarray(params["w"]), ref)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(num_hosts=8, patience=3)
+    inj = FailureInjector([Failure(step=5, kind="straggler", host=2,
+                                   factor=6.0)])
+    persistent = []
+    for step in range(12):
+        inj.at_step(step)
+        times = np.asarray([inj.step_time(h, 1.0 + 0.01 * h)
+                            for h in range(8)])
+        mon.observe(times)
+        persistent = mon.persistent()
+    assert persistent == [2]
+
+
+def test_straggler_monitor_no_false_positives():
+    mon = StragglerMonitor(num_hosts=8)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        mon.observe(1.0 + 0.05 * rng.random(8))
+    assert mon.persistent() == []
+
+
+def test_plan_recovery_pod_loss():
+    plan = plan_recovery(256)
+    assert plan.viable
+    assert plan.mesh_shape == (16, 16)
+    assert plan.accum_multiplier == 2  # keep the global batch
+
+
+def test_plan_recovery_partial_host_loss():
+    plan = plan_recovery(200)  # lost 3.5 hosts' worth from one pod
+    assert plan.viable
+    assert plan.mesh_shape == (12, 16)
+    assert plan.chips <= 200
+
+
+def test_plan_recovery_below_floor():
+    plan = plan_recovery(48)
+    assert not plan.viable
+    assert "48" in plan.reason
+
+
+def test_failure_injector_host_down():
+    inj = FailureInjector([Failure(step=2, kind="host_down", host=1)])
+    inj.at_step(0)
+    assert inj.alive(4) == [0, 1, 2, 3]
+    inj.at_step(2)
+    assert inj.alive(4) == [0, 2, 3]
