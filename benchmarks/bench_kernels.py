@@ -54,6 +54,74 @@ def fused_rfnn_linear(n=64, batch=256) -> list[str]:
                 f"hbm_bytes {hbm_fused} vs {hbm_unfused} (3x saved)")]
 
 
+def mesh_kernel_fwd_bwd(sizes=(16, 64), batch=128) -> list[str]:
+    """fwd+bwd through the mesh: kernel custom-VJP vs reference autodiff.
+
+    The kernel backward is one reversed-column Pallas sweep (unitarity
+    trick, DESIGN.md) instead of lax.scan's stored-intermediate transpose;
+    the derived column reports the residual HBM bytes autodiff would have
+    stored per column and the max grad deviation between the two paths.
+    """
+    rows = []
+    for n in sizes:
+        plan = mesh_lib.clements_plan(n)
+        params = mesh_lib.init_mesh_params(jax.random.PRNGKey(n), plan)
+        k = jax.random.PRNGKey(0)
+        x = (jax.random.normal(k, (batch, n))
+             + 1j * jax.random.normal(jax.random.fold_in(k, 1),
+                                      (batch, n))).astype(jnp.complex64)
+
+        def loss_k(p, xx, n=n):
+            return jnp.sum(jnp.abs(ops.mesh_apply(p, xx, n=n, block_b=64)))
+
+        def loss_r(p, xx, n=n):
+            return jnp.sum(jnp.abs(ref.mesh_apply_ref(p, xx, n)))
+
+        k_fn = jax.jit(jax.grad(loss_k))
+        r_fn = jax.jit(jax.grad(loss_r))
+        us_k = time_call(k_fn, params, x, iters=3)
+        us_r = time_call(r_fn, params, x, iters=3)
+        gk, gr = k_fn(params, x), r_fn(params, x)
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)))
+        saved_bytes = n * batch * n * 8  # autodiff: one complex panel/column
+        rows.append(row(f"mesh_fwd_bwd_n{n}", us_k,
+                        f"ref_autodiff_us={us_r:.1f};max_grad_err={err:.1e};"
+                        f"residual_hbm_bytes_saved={saved_bytes}"))
+    return rows
+
+
+def rfnn_linear_fwd_bwd(n=16, batch=128) -> list[str]:
+    """fwd+bwd through the fused analog linear layer, both paths."""
+    plan = mesh_lib.clements_plan(n)
+    vp = mesh_lib.init_mesh_params(jax.random.PRNGKey(0), plan)
+    up = mesh_lib.init_mesh_params(jax.random.PRNGKey(1), plan)
+    atten = jax.random.uniform(jax.random.PRNGKey(2), (n,), minval=0.1,
+                               maxval=0.9)
+    x = jax.random.normal(jax.random.PRNGKey(3), (batch, n))
+
+    def loss_k(v, a, u, xx):
+        return jnp.sum(ops.rfnn_linear(v, a, u, xx, n=n, block_b=64))
+
+    def loss_r(v, a, u, xx):
+        return jnp.sum(ref.rfnn_linear_ref(v, a, u,
+                                           xx.astype(jnp.complex64), n))
+
+    k_fn = jax.jit(jax.grad(loss_k, argnums=(0, 1, 2)))
+    r_fn = jax.jit(jax.grad(loss_r, argnums=(0, 1, 2)))
+    us_k = time_call(k_fn, vp, atten, up, x, iters=3)
+    us_r = time_call(r_fn, vp, atten, up, x, iters=3)
+    gk, gr = k_fn(vp, atten, up, x), r_fn(vp, atten, up, x)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)))
+    # bwd residuals: 2 stage boundaries vs one complex panel per column
+    hbm_kernel = 2 * 4 * batch * (n // 2) * 4
+    hbm_autodiff = 2 * n * batch * n * 8
+    return [row("rfnn_linear_fwd_bwd", us_k,
+                f"ref_autodiff_us={us_r:.1f};max_grad_err={err:.1e};"
+                f"residual_hbm_bytes {hbm_kernel} vs {hbm_autodiff}")]
+
+
 def flash_attention_kernel(s=512, hd=64, h=4, b=2) -> list[str]:
     """Flash attention kernel vs dense-softmax reference (interpret mode)."""
     from repro.kernels.flash_attention import flash_attention
@@ -76,4 +144,5 @@ def flash_attention_kernel(s=512, hd=64, h=4, b=2) -> list[str]:
                 f"score_hbm_bytes_saved={score_bytes}")]
 
 
-ALL = [mesh_kernel_sweep, fused_rfnn_linear, flash_attention_kernel]
+ALL = [mesh_kernel_sweep, fused_rfnn_linear, mesh_kernel_fwd_bwd,
+       rfnn_linear_fwd_bwd, flash_attention_kernel]

@@ -4,8 +4,10 @@ Layout (one directory per step):
 
     ckpt_dir/
       step_000100/
-        manifest.json          # tree structure, shapes/dtypes, data step
-        host_000.npz           # this host's param/opt shards (zstd)
+        manifest.json          # tree structure, shapes/dtypes, data step,
+                               # compression codec
+        host_000.ckpt          # this host's param/opt shards (headered,
+                               # zstd- or zlib-compressed npz)
         ...
       LATEST                   # atomically updated pointer file
 
@@ -19,6 +21,13 @@ Fault-tolerance properties:
   * ``restore`` validates the manifest tree against the expected structure
     and resumes the deterministic data stream at ``data_step``;
   * ``keep`` retention deletes old steps only after a newer one is durable.
+
+Compression: shards are zstd-compressed when ``zstandard`` is installed and
+fall back to stdlib ``zlib`` otherwise, so importing and using this module
+never requires the optional dependency.  Each shard carries a small header
+recording the codec, and ``restore`` dispatches on it — checkpoints written
+with either codec (including pre-header zstd shards) restore on any host
+that has the matching decompressor.
 """
 
 from __future__ import annotations
@@ -28,11 +37,53 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from pathlib import Path
 
 import jax
 import numpy as np
-import zstandard
+
+try:  # optional: the container may not ship zstandard
+    import zstandard
+except ImportError:  # pragma: no cover - depends on the environment
+    zstandard = None
+
+#: shard header: magic + 4-byte codec tag, then the compressed payload
+_MAGIC = b"RPCK"
+_CODECS = ("zstd", "zlib")
+
+
+def _default_codec() -> str:
+    return "zstd" if zstandard is not None else "zlib"
+
+
+def _compress(data: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError("codec 'zstd' requested but zstandard is "
+                               "not installed; use codec='zlib'")
+        payload = zstandard.ZstdCompressor(level=3).compress(data)
+    elif codec == "zlib":
+        payload = zlib.compress(data, 6)
+    else:
+        raise ValueError(f"unknown checkpoint codec {codec!r}")
+    return _MAGIC + codec.encode("ascii").ljust(4, b"\0") + payload
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _MAGIC:
+        codec = blob[4:8].rstrip(b"\0").decode("ascii")
+        payload = blob[8:]
+    else:  # legacy shard written before the codec header existed
+        codec, payload = "zstd", blob
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError("checkpoint shard is zstd-compressed but "
+                               "zstandard is not installed")
+        return zstandard.ZstdDecompressor().decompress(payload)
+    if codec == "zlib":
+        return zlib.decompress(payload)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten_with_paths(tree):
@@ -42,12 +93,21 @@ def _flatten_with_paths(tree):
 
 class CheckpointManager:
     def __init__(self, directory: str | Path, *, keep: int = 3,
-                 host_id: int = 0, num_hosts: int = 1):
+                 host_id: int = 0, num_hosts: int = 1,
+                 codec: str | None = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.host_id = host_id
         self.num_hosts = num_hosts
+        self.codec = codec if codec is not None else _default_codec()
+        if self.codec not in _CODECS:
+            raise ValueError(f"unknown checkpoint codec {self.codec!r}")
+        if self.codec == "zstd" and zstandard is None:
+            # fail fast here: a late _compress error inside save_async's
+            # worker thread would silently drop every checkpoint
+            raise RuntimeError("codec 'zstd' requested but zstandard is "
+                               "not installed; use codec='zlib'")
         self._worker: threading.Thread | None = None
 
     # ------------------------------------------------------------------
@@ -87,13 +147,16 @@ class CheckpointManager:
         buf = io.BytesIO()
         np.savez(buf, **{f"leaf_{i}": np.asarray(v)
                          for i, (_, v) in enumerate(leaves)})
-        payload = zstandard.ZstdCompressor(level=3).compress(buf.getvalue())
-        (tmp / f"host_{self.host_id:03d}.zst").write_bytes(payload)
+        payload = _compress(buf.getvalue(), self.codec)
+        # codec-neutral extension: the payload may be zstd or zlib (header
+        # decides); a .zst name would mislabel zlib shards
+        (tmp / f"host_{self.host_id:03d}.ckpt").write_bytes(payload)
 
         if self.host_id == 0:
             manifest = {
                 "step": step,
                 "data_step": data_step,
+                "codec": self.codec,
                 "num_hosts": self.num_hosts,
                 "paths": [p for p, _ in leaves],
                 "shapes": [list(np.shape(v)) for _, v in leaves],
@@ -136,8 +199,10 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = self._step_dir(step)
         manifest = json.loads((d / "manifest.json").read_text())
-        raw = zstandard.ZstdDecompressor().decompress(
-            (d / f"host_{self.host_id:03d}.zst").read_bytes())
+        shard = d / f"host_{self.host_id:03d}.ckpt"
+        if not shard.exists():  # legacy checkpoints used a .zst suffix
+            shard = d / f"host_{self.host_id:03d}.zst"
+        raw = _decompress(shard.read_bytes())
         data = np.load(io.BytesIO(raw))
         leaves = [data[f"leaf_{i}"] for i in range(len(manifest["paths"]))]
 

@@ -14,6 +14,13 @@ Three composable modules, all ``init(key) -> params`` / ``apply(params, x)``:
 Each supports Table-I discrete-phase quantization (straight-through
 gradients) and the hardware-imperfection model, so "analog" training can be
 made exactly as faithful as the prototype.
+
+``backend="pallas"`` routes both inference *and* training through the fused
+Pallas mesh kernels (``repro.kernels``), which carry custom VJPs — the
+reference ``lax.scan`` path and the kernel path are interchangeable
+gradient-for-gradient.  The kernel path covers the ideal-physics simulation
+on rectangular Clements layouts; the per-cell hardware-imperfection model
+and analytically programmed Reck layouts keep the reference path.
 """
 
 from __future__ import annotations
@@ -29,9 +36,20 @@ from repro.core import hardware as hw_lib
 from repro.core import mesh as mesh_lib
 from repro.core import quantize as q_lib
 from repro.core import svd_synthesis
+from repro.kernels import ops as kernel_ops
 
 Array = jax.Array
 OutputMode = Literal["abs", "real", "complex"]
+Backend = Literal["reference", "pallas"]
+
+
+def _is_rect_clements(plan: mesh_lib.MeshPlan) -> bool:
+    """True when the plan has the rectangular layout the kernels assume."""
+    if plan.n_columns != plan.n:
+        return False
+    rect = mesh_lib.clements_plan(plan.n)
+    return (np.array_equal(plan.top, rect.top)
+            and np.array_equal(plan.active, rect.active))
 
 
 def _as_complex(x: Array) -> Array:
@@ -59,6 +77,7 @@ class AnalogUnitary:
     quantize: str | None = None      # None | "table1" | "uniform<bits>"
     hardware: hw_lib.HardwareModel | None = None
     output: OutputMode = "complex"
+    backend: Backend = "reference"
 
     def __post_init__(self):
         object.__setattr__(self, "_plan", mesh_lib.clements_plan(self.n))
@@ -89,10 +108,14 @@ class AnalogUnitary:
         p = self.effective_params(params)
         xc = _as_complex(x)
         if self.hardware is not None:
+            # per-cell imperfection model: reference path only
             kmesh, kdet = (jax.random.split(key) if key is not None else (None, None))
             y = hw_lib.apply_mesh_hw(self.plan, p, xc, self.hardware, kmesh)
             return _readout(y, self.output, self.hardware, kdet)
-        y = mesh_lib.apply_mesh(self.plan, p, xc)
+        if self.backend == "pallas":
+            y = kernel_ops.mesh_apply(p, xc, n=self.n)
+        else:
+            y = mesh_lib.apply_mesh(self.plan, p, xc)
         return _readout(y, self.output, None, None)
 
     def matrix(self, params: dict) -> Array:
@@ -111,6 +134,7 @@ class AnalogLinear:
     quantize: str | None = None
     hardware: hw_lib.HardwareModel | None = None
     output: OutputMode = "real"
+    backend: Backend = "reference"
 
     def __post_init__(self):
         n = max(self.in_dim, self.out_dim)
@@ -119,6 +143,7 @@ class AnalogLinear:
         plan = mesh_lib.clements_plan(n)
         object.__setattr__(self, "_u_plan", plan)
         object.__setattr__(self, "_v_plan", plan)
+        object.__setattr__(self, "_plans_rect", True)
 
     @property
     def u_plan(self) -> mesh_lib.MeshPlan:
@@ -164,6 +189,17 @@ class AnalogLinear:
             y = hw_lib.apply_mesh_hw(self.u_plan, u_p, h, self.hardware, ku)
             y = scale * y[..., : self.out_dim]
             return _readout(y, self.output, self.hardware, kd)
+        if self.backend == "pallas" and self._plans_rect:  # type: ignore[attr-defined]
+            if self.output == "abs":
+                # one fused kernel: V-mesh -> diag -> U-mesh -> |detect|
+                y = kernel_ops.rfnn_linear(v_p, atten, u_p, xc, n=self.n,
+                                           scale=scale)
+                return y[..., : self.out_dim]
+            h = kernel_ops.mesh_apply(v_p, xc, n=self.n)
+            h = h * atten
+            y = kernel_ops.mesh_apply(u_p, h, n=self.n)
+            y = scale * y[..., : self.out_dim]
+            return _readout(y, self.output, None, None)
         h = mesh_lib.apply_mesh(self.v_plan, v_p, xc)
         h = h * atten
         y = mesh_lib.apply_mesh(self.u_plan, u_p, h)
@@ -186,6 +222,10 @@ class AnalogLinear:
         }
         object.__setattr__(self, "_u_plan", syn.u_plan)
         object.__setattr__(self, "_v_plan", syn.v_plan)
+        # rect-ness decided once per (re)programming, not per apply
+        object.__setattr__(self, "_plans_rect",
+                           _is_rect_clements(syn.u_plan)
+                           and _is_rect_clements(syn.v_plan))
         return params
 
     def n_cells(self) -> int:
@@ -207,6 +247,7 @@ class TiledAnalogLinear:
     quantize: str | None = None
     hardware: hw_lib.HardwareModel | None = None
     output: OutputMode = "real"
+    backend: Backend = "reference"
 
     def __post_init__(self):
         t = self.tile_size
@@ -217,7 +258,7 @@ class TiledAnalogLinear:
                 f"dims ({self.out_dim},{self.in_dim}) must be multiples of tile {t}")
         object.__setattr__(self, "_tile", AnalogLinear(
             in_dim=t, out_dim=t, quantize=self.quantize, hardware=None,
-            output="complex"))
+            output="complex", backend=self.backend))
 
     @property
     def tile(self) -> AnalogLinear:

@@ -1,8 +1,9 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-givens_mesh      — the paper's mesh MVM (columns of 2x2 complex rotations)
+givens_mesh      — the paper's mesh MVM (columns of 2x2 complex rotations),
+                   forward and backward (custom-VJP kernels, DESIGN.md)
 flash_attention  — fused attention (motivated by the roofline's memory term)
-ops              — jitted public wrappers
+ops              — jitted, differentiable public wrappers
 ref              — pure-jnp oracles (the allclose ground truth)
 EXAMPLE.md       — scaffold notes
 """

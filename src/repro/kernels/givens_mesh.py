@@ -20,6 +20,14 @@ Kernels:
   * ``rfnn_linear_kernel`` — fused analog linear layer
     V-mesh -> diag gain -> U-mesh -> |detect| (paper Eq. 31 + Fig. 14),
     one VMEM residency for the whole layer.
+  * ``mesh_bwd_kernel`` / ``rfnn_linear_bwd_kernel`` — the custom VJPs.
+    Because every mesh column is unitary, the backward pass re-runs the
+    column sequence *in reverse* with conjugate-transposed coefficients:
+    that single reversed sweep simultaneously (a) recomputes each column's
+    input state from the saved forward output (no per-column residuals in
+    HBM) and (b) propagates the cotangent, while per-column coefficient
+    gradients are accumulated into a [C, 8, P] output that is revisited
+    across batch-grid steps.  See DESIGN.md ("Backward pass").
 
 Validated against ``ref.py`` in interpret mode (this container is CPU-only;
 TPU is the compilation target).
@@ -118,19 +126,31 @@ def mesh_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
 # Kernel 2: fused analog linear  (V-mesh -> diag -> U-mesh -> |detect|)
 # ---------------------------------------------------------------------------
 
+def _rfnn_forward(coef_v_ref, coef_u_ref, gains_ref, state):
+    """The fused layer body: V -> g1 -> U -> g2 -> |detect|.
+
+    Returns detected magnitudes plus the two pre-gain stage boundaries
+    (the VJP forward's residuals); the inference kernel discards them.
+    """
+    v = _run_columns(coef_v_ref, state)
+    g = gains_ref[...]  # [8, P]: g1 (even re/im, odd re/im), g2 (...)
+    er, ei = _cmul(v[0], v[1], g[0], g[1])
+    orr, oi = _cmul(v[2], v[3], g[2], g[3])
+    u = _run_columns(coef_u_ref, (er, ei, orr, oi))
+    zer, zei = _cmul(u[0], u[1], g[4], g[5])
+    zor, zoi = _cmul(u[2], u[3], g[6], g[7])
+    oe = jnp.sqrt(zer * zer + zei * zei)   # |detect| on even channels
+    oo = jnp.sqrt(zor * zor + zoi * zoi)
+    return oe, oo, v, u
+
+
 def rfnn_linear_kernel(coef_v_ref, coef_u_ref, gains_ref,
                        xer_ref, xei_ref, xor_ref, xoi_ref,
                        oe_ref, oo_ref):
     state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
-    er, ei, orr, oi = _run_columns(coef_v_ref, state)
-    g = gains_ref[...]  # [8, P]: g1 (even re/im, odd re/im), g2 (...)
-    er, ei = _cmul(er, ei, g[0], g[1])
-    orr, oi = _cmul(orr, oi, g[2], g[3])
-    er, ei, orr, oi = _run_columns(coef_u_ref, (er, ei, orr, oi))
-    er, ei = _cmul(er, ei, g[4], g[5])
-    orr, oi = _cmul(orr, oi, g[6], g[7])
-    oe_ref[...] = jnp.sqrt(er * er + ei * ei)   # |detect| on even channels
-    oo_ref[...] = jnp.sqrt(orr * orr + oi * oi)
+    oe, oo, _, _ = _rfnn_forward(coef_v_ref, coef_u_ref, gains_ref, state)
+    oe_ref[...] = oe
+    oo_ref[...] = oo
 
 
 def rfnn_linear_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
@@ -153,6 +173,252 @@ def rfnn_linear_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
             flops=flops_per_block * n_batch_blocks,
             bytes_accessed=(6 * batch_block * p * 4 + 2 * n * 8 * p * 4
                             + 8 * p * 4) * n_batch_blocks,
+            transcendentals=batch_block * p * 2 * n_batch_blocks,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backward pass building blocks (the custom VJPs)
+# ---------------------------------------------------------------------------
+
+def adjoint_coefficients(coef: jax.Array) -> jax.Array:
+    """Conjugate-transpose each packed 2x2 cell, column layout preserved.
+
+    Rows (t00, t01, t10, t11) x (re, im) -> (t00*, t10*, t01*, t11*).  The
+    adjoint mesh applied in *reverse column order* is the exact inverse of
+    the forward mesh (each column is unitary), which is what lets the
+    backward kernel rebuild every intermediate state from the forward
+    output instead of storing it.
+    """
+    idx = jnp.asarray([0, 1, 4, 5, 2, 3, 6, 7])
+    sign = jnp.asarray([1.0, -1.0] * 4, coef.dtype)
+    return coef[:, idx, :] * sign[None, :, None]
+
+
+def _conj_dot(xr, xi, gr, gi):
+    """Batch-summed conj(x) * g — one complex coefficient gradient entry."""
+    return (jnp.sum(xr * gr + xi * gi, axis=0, keepdims=True),
+            jnp.sum(xr * gi - xi * gr, axis=0, keepdims=True))
+
+
+def _pair_grad_rows(ar, ai, br, bi, gar, gai, gbr, gbi):
+    """d loss / d t for (a2, b2) = t (a, b): rows (00, 01, 10, 11)(re, im)."""
+    r0, r1 = _conj_dot(ar, ai, gar, gai)
+    r2, r3 = _conj_dot(br, bi, gar, gai)
+    r4, r5 = _conj_dot(ar, ai, gbr, gbi)
+    r6, r7 = _conj_dot(br, bi, gbr, gbi)
+    return jnp.concatenate([r0, r1, r2, r3, r4, r5, r6, r7], axis=0)  # [8, P]
+
+
+def _coef_grad(c, s_in, g_out):
+    """Coefficient gradient of column ``c`` from its input state and the
+    cotangent at its output, in the column's own pairing."""
+    er, ei, orr, oi = s_in
+    ger, gei, gor, goi = g_out
+
+    def even(_):
+        return _pair_grad_rows(er, ei, orr, oi, ger, gei, gor, goi)
+
+    def odd(_):
+        rows = _pair_grad_rows(
+            orr[:, :-1], oi[:, :-1], er[:, 1:], ei[:, 1:],
+            gor[:, :-1], goi[:, :-1], ger[:, 1:], gei[:, 1:])
+        # wrap slot of odd columns holds no cell
+        return jnp.concatenate([rows, jnp.zeros((8, 1), rows.dtype)], axis=1)
+
+    return jax.lax.cond(c % 2 == 0, even, odd, None)
+
+
+def _run_columns_bwd(coef_adj_ref, dcoef_ref, state, cot):
+    """Reversed column sweep: recompute states, accumulate phase gradients,
+    propagate the cotangent.  ``state`` starts at the mesh *output*."""
+    n_cols = coef_adj_ref.shape[0]
+
+    def body(k, carry):
+        c = n_cols - 1 - k
+        s, g = carry[0:4], carry[4:8]
+        s_in = _column_body(coef_adj_ref, c, s)      # T_c^H s_{c+1} = s_c
+        dcoef_ref[c] = dcoef_ref[c] + _coef_grad(c, s_in, g)
+        g_in = _column_body(coef_adj_ref, c, g)      # T_c^H g_{c+1}
+        return (*s_in, *g_in)
+
+    out = jax.lax.fori_loop(0, n_cols, body, (*state, *cot))
+    return out[0:4], out[4:8]
+
+
+def mesh_bwd_kernel(coef_adj_ref, yer_ref, yei_ref, yor_ref, yoi_ref,
+                    ger_ref, gei_ref, gor_ref, goi_ref,
+                    dcoef_ref, dxer_ref, dxei_ref, dxor_ref, dxoi_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dcoef_ref[...] = jnp.zeros(dcoef_ref.shape, dcoef_ref.dtype)
+
+    y = (yer_ref[...], yei_ref[...], yor_ref[...], yoi_ref[...])
+    g = (ger_ref[...], gei_ref[...], gor_ref[...], goi_ref[...])
+    _, gx = _run_columns_bwd(coef_adj_ref, dcoef_ref, y, g)
+    dxer_ref[...] = gx[0]
+    dxei_ref[...] = gx[1]
+    dxor_ref[...] = gx[2]
+    dxoi_ref[...] = gx[3]
+
+
+def mesh_bwd_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
+                         interpret: bool):
+    p = n // 2
+    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
+    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
+    out_shape = (
+        [jax.ShapeDtypeStruct((n, 8, p), jnp.float32)]
+        + [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
+                                jnp.float32)] * 4)
+    # state recompute + cotangent propagation + coefficient grads ~ 3x fwd
+    flops_per_block = 3 * 2 * (n * (n - 1) // 2) * batch_block * 16
+    return pl.pallas_call(
+        mesh_bwd_kernel,
+        grid=(n_batch_blocks,),
+        in_specs=[coef] + [plane] * 8,
+        out_specs=[coef] + [plane] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops_per_block * n_batch_blocks,
+            bytes_accessed=(12 * batch_block * p * 4 + 2 * n * 8 * p * 4)
+            * n_batch_blocks,
+            transcendentals=0,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused analog linear: forward-with-residuals and backward
+# ---------------------------------------------------------------------------
+
+def rfnn_linear_fwd_kernel(coef_v_ref, coef_u_ref, gains_ref,
+                           xer_ref, xei_ref, xor_ref, xoi_ref,
+                           oe_ref, oo_ref,
+                           ver_ref, vei_ref, vor_ref, voi_ref,
+                           uer_ref, uei_ref, uor_ref, uoi_ref):
+    """Forward identical to ``rfnn_linear_kernel`` (same ``_rfnn_forward``
+    body) but additionally writes the two stage boundaries (post-V and
+    post-U, both pre-gain) — the only residuals the backward pass needs."""
+    state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
+    oe, oo, v, u = _rfnn_forward(coef_v_ref, coef_u_ref, gains_ref, state)
+    oe_ref[...] = oe
+    oo_ref[...] = oo
+    ver_ref[...], vei_ref[...], vor_ref[...], voi_ref[...] = v
+    uer_ref[...], uei_ref[...], uor_ref[...], uoi_ref[...] = u
+
+
+def rfnn_linear_fwd_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
+                                interpret: bool):
+    p = n // 2
+    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
+    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
+    gains = pl.BlockSpec((8, p), lambda i: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
+                                      jnp.float32)] * 10
+    flops_per_block = 2 * (2 * (n * (n - 1) // 2) * 16 + 3 * n) * batch_block
+    return pl.pallas_call(
+        rfnn_linear_fwd_kernel,
+        grid=(n_batch_blocks,),
+        in_specs=[coef, coef, gains, plane, plane, plane, plane],
+        out_specs=[plane] * 10,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops_per_block * n_batch_blocks,
+            bytes_accessed=(14 * batch_block * p * 4 + 2 * n * 8 * p * 4
+                            + 8 * p * 4) * n_batch_blocks,
+            transcendentals=batch_block * p * 2 * n_batch_blocks,
+        ),
+    )
+
+
+def rfnn_linear_bwd_kernel(coef_v_adj_ref, coef_u_adj_ref, gains_ref,
+                           ver_ref, vei_ref, vor_ref, voi_ref,
+                           uer_ref, uei_ref, uor_ref, uoi_ref,
+                           goe_ref, goo_ref,
+                           dcv_ref, dcu_ref, dg_ref,
+                           dxer_ref, dxei_ref, dxor_ref, dxoi_ref):
+    """Unwind |detect| -> g2 -> U-mesh -> g1 -> V-mesh in one VMEM residency.
+
+    Saved residuals are only the two stage boundaries; everything inside a
+    mesh is recomputed by the reversed adjoint column sweep.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dcv_ref[...] = jnp.zeros(dcv_ref.shape, dcv_ref.dtype)
+        dcu_ref[...] = jnp.zeros(dcu_ref.shape, dcu_ref.dtype)
+        dg_ref[...] = jnp.zeros(dg_ref.shape, dg_ref.dtype)
+
+    g = gains_ref[...]
+    v = (ver_ref[...], vei_ref[...], vor_ref[...], voi_ref[...])
+    u = (uer_ref[...], uei_ref[...], uor_ref[...], uoi_ref[...])
+    goe, goo = goe_ref[...], goo_ref[...]
+
+    # |detect| backward: d|z|/dz = z / |z| (0 at the non-smooth origin,
+    # which also kills the padded batch rows).
+    zer, zei = _cmul(u[0], u[1], g[4], g[5])
+    zor, zoi = _cmul(u[2], u[3], g[6], g[7])
+    me = jnp.sqrt(zer * zer + zei * zei)
+    mo = jnp.sqrt(zor * zor + zoi * zoi)
+    inv_e = jnp.where(me > 0, goe / jnp.where(me > 0, me, 1.0), 0.0)
+    inv_o = jnp.where(mo > 0, goo / jnp.where(mo > 0, mo, 1.0), 0.0)
+    gzer, gzei = inv_e * zer, inv_e * zei
+    gzor, gzoi = inv_o * zor, inv_o * zoi
+
+    # post-gain g2: gradient rows 4..7 and cotangent of the U output
+    dg2 = (_conj_dot(u[0], u[1], gzer, gzei)
+           + _conj_dot(u[2], u[3], gzor, gzoi))
+    guer, guei = _cmul(g[4], -g[5], gzer, gzei)
+    guor, guoi = _cmul(g[6], -g[7], gzor, gzoi)
+
+    # U mesh: reversed adjoint sweep from the saved post-U boundary
+    _, gh = _run_columns_bwd(coef_u_adj_ref, dcu_ref, u,
+                             (guer, guei, guor, guoi))
+
+    # mid gain g1: gradient rows 0..3 and cotangent of the V output
+    dg1 = (_conj_dot(v[0], v[1], gh[0], gh[1])
+           + _conj_dot(v[2], v[3], gh[2], gh[3]))
+    gver, gvei = _cmul(g[0], -g[1], gh[0], gh[1])
+    gvor, gvoi = _cmul(g[2], -g[3], gh[2], gh[3])
+
+    dg_ref[...] = dg_ref[...] + jnp.concatenate(list(dg1) + list(dg2), axis=0)
+
+    # V mesh: reversed adjoint sweep from the saved post-V boundary
+    _, gx = _run_columns_bwd(coef_v_adj_ref, dcv_ref, v,
+                             (gver, gvei, gvor, gvoi))
+    dxer_ref[...] = gx[0]
+    dxei_ref[...] = gx[1]
+    dxor_ref[...] = gx[2]
+    dxoi_ref[...] = gx[3]
+
+
+def rfnn_linear_bwd_pallas_call(n: int, batch_block: int,
+                                n_batch_blocks: int, interpret: bool):
+    p = n // 2
+    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
+    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
+    gains = pl.BlockSpec((8, p), lambda i: (0, 0))
+    out_shape = (
+        [jax.ShapeDtypeStruct((n, 8, p), jnp.float32)] * 2
+        + [jax.ShapeDtypeStruct((8, p), jnp.float32)]
+        + [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
+                                jnp.float32)] * 4)
+    flops_per_block = 3 * 2 * (2 * (n * (n - 1) // 2) * 16 + 6 * n) \
+        * batch_block
+    return pl.pallas_call(
+        rfnn_linear_bwd_kernel,
+        grid=(n_batch_blocks,),
+        in_specs=[coef, coef, gains] + [plane] * 10,
+        out_specs=[coef, coef, gains] + [plane] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops_per_block * n_batch_blocks,
+            bytes_accessed=(14 * batch_block * p * 4 + 4 * n * 8 * p * 4
+                            + 2 * 8 * p * 4) * n_batch_blocks,
             transcendentals=batch_block * p * 2 * n_batch_blocks,
         ),
     )

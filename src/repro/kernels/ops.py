@@ -1,7 +1,16 @@
-"""Jitted public wrappers around the Pallas mesh kernels.
+"""Jitted, differentiable public wrappers around the Pallas mesh kernels.
 
 ``interpret`` defaults to True off-TPU so the same call sites run in this
 CPU container (kernel body executed op-by-op) and compile to Mosaic on TPU.
+
+Both ``mesh_apply`` and ``rfnn_linear`` carry custom VJPs: the backward
+pass is itself a fused Pallas kernel that re-runs the mesh columns in
+reverse with conjugate-transposed coefficients (unitarity trick — see
+DESIGN.md), so training keeps the same VMEM-resident hot loop as
+inference.  Everything outside the pallas_call boundary (coefficient
+packing from theta/phi, channel split/merge, phase screens, gains) is
+ordinary JAX and differentiates natively, which is how gradients reach
+the mesh phases, attenuations and the digital scale.
 """
 
 from __future__ import annotations
@@ -20,6 +29,11 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _auto_block(b: int, block_b: int) -> int:
+    """Shrink the batch block for small batches (never grow past block_b)."""
+    return max(1, min(block_b, -(-b // 8) * 8))
+
+
 def _pad_batch(x2d: Array, block: int) -> tuple[Array, int]:
     b = x2d.shape[0]
     pad = (-b) % block
@@ -29,25 +43,87 @@ def _pad_batch(x2d: Array, block: int) -> tuple[Array, int]:
     return x2d, b
 
 
+# ---------------------------------------------------------------------------
+# custom-VJP boundary: de-interleaved planes in, planes out
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _mesh_planes(n, block_b, nb, interpret, coef, xer, xei, xor, xoi):
+    call = givens_mesh.mesh_pallas_call(n, block_b, nb, interpret)
+    return tuple(call(coef, xer, xei, xor, xoi))
+
+
+def _mesh_planes_fwd(n, block_b, nb, interpret, coef, xer, xei, xor, xoi):
+    outs = _mesh_planes(n, block_b, nb, interpret, coef, xer, xei, xor, xoi)
+    # unitarity: the output planes are the only state residual needed
+    return outs, (coef, outs)
+
+
+def _mesh_planes_bwd(n, block_b, nb, interpret, res, cot):
+    coef, outs = res
+    coef_adj = givens_mesh.adjoint_coefficients(coef)
+    call = givens_mesh.mesh_bwd_pallas_call(n, block_b, nb, interpret)
+    dcoef, dxer, dxei, dxor, dxoi = call(coef_adj, *outs, *cot)
+    return dcoef, dxer, dxei, dxor, dxoi
+
+
+_mesh_planes.defvjp(_mesh_planes_fwd, _mesh_planes_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _rfnn_planes(n, block_b, nb, interpret, coef_v, coef_u, gains,
+                 xer, xei, xor, xoi):
+    call = givens_mesh.rfnn_linear_pallas_call(n, block_b, nb, interpret)
+    return tuple(call(coef_v, coef_u, gains, xer, xei, xor, xoi))
+
+
+def _rfnn_planes_fwd(n, block_b, nb, interpret, coef_v, coef_u, gains,
+                     xer, xei, xor, xoi):
+    call = givens_mesh.rfnn_linear_fwd_pallas_call(n, block_b, nb, interpret)
+    oe, oo, *stage = call(coef_v, coef_u, gains, xer, xei, xor, xoi)
+    return (oe, oo), (coef_v, coef_u, gains, tuple(stage))
+
+
+def _rfnn_planes_bwd(n, block_b, nb, interpret, res, cot):
+    coef_v, coef_u, gains, stage = res
+    cva = givens_mesh.adjoint_coefficients(coef_v)
+    cua = givens_mesh.adjoint_coefficients(coef_u)
+    call = givens_mesh.rfnn_linear_bwd_pallas_call(n, block_b, nb, interpret)
+    dcv, dcu, dgains, dxer, dxei, dxor, dxoi = call(
+        cva, cua, gains, *stage, *cot)
+    return dcv, dcu, dgains, dxer, dxei, dxor, dxoi
+
+
+_rfnn_planes.defvjp(_rfnn_planes_fwd, _rfnn_planes_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public wrappers
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("n", "block_b", "interpret"))
 def mesh_apply(params: dict, x: Array, *, n: int, block_b: int = 128,
                interpret: bool | None = None) -> Array:
     """Apply a Clements-layout mesh to ``x[..., n]`` via the Pallas kernel.
 
     Semantics match ``repro.core.mesh.apply_mesh`` on a clements plan
-    (including the optional output phase screen ``alpha``).
+    (including the optional phase screens ``alpha_in`` / ``alpha``).
+    Differentiable w.r.t. ``params`` and ``x`` through the kernel VJP.
     """
     if interpret is None:
         interpret = _default_interpret()
     batch_shape = x.shape[:-1]
     x2 = x.reshape((-1, n)).astype(jnp.complex64)
-    x2, b_orig = _pad_batch(x2, block_b)
-    nb = x2.shape[0] // block_b
+    alpha_in = params.get("alpha_in")
+    if alpha_in is not None:
+        x2 = x2 * jnp.exp(-1j * alpha_in.astype(jnp.complex64))
+    bb = _auto_block(x2.shape[0], block_b)
+    x2, b_orig = _pad_batch(x2, bb)
+    nb = x2.shape[0] // bb
 
     coef = ref.clements_coefficients(params["theta"], params["phi"], n)
     planes = ref.split_channels(x2)
-    call = givens_mesh.mesh_pallas_call(n, block_b, nb, interpret)
-    planes = call(coef, *planes)
+    planes = _mesh_planes(n, bb, nb, interpret, coef, *planes)
     y = ref.merge_channels(*planes)[:b_orig]
     alpha = params.get("alpha")
     if alpha is not None:
@@ -63,21 +139,29 @@ def rfnn_linear(v_params: dict, atten: Array, u_params: dict, x: Array, *,
 
     ``atten``: [n] real attenuation (paper's diagonal D / sigma_max);
     ``scale``: the digital gamma.  Output is the detected magnitude [.., n].
+    Differentiable w.r.t. both mesh params, ``atten``, ``scale`` and ``x``
+    through the fused kernel VJP.
     """
     if interpret is None:
         interpret = _default_interpret()
     batch_shape = x.shape[:-1]
     x2 = x.reshape((-1, n)).astype(jnp.complex64)
-    x2, b_orig = _pad_batch(x2, block_b)
-    nb = x2.shape[0] // block_b
+    if v_params.get("alpha_in") is not None:
+        x2 = x2 * jnp.exp(-1j * v_params["alpha_in"].astype(jnp.complex64))
+    bb = _auto_block(x2.shape[0], block_b)
+    x2, b_orig = _pad_batch(x2, bb)
+    nb = x2.shape[0] // bb
 
     coef_v = ref.clements_coefficients(v_params["theta"], v_params["phi"], n)
     coef_u = ref.clements_coefficients(u_params["theta"], u_params["phi"], n)
 
-    # fold V's output screen into the mid-gain and U's into the post-gain
+    # fold V's output screen (and U's input screen) into the mid-gain and
+    # U's output screen into the post-gain — all diagonal, so they commute
     g1 = atten.astype(jnp.complex64)
     if v_params.get("alpha") is not None:
         g1 = g1 * jnp.exp(-1j * v_params["alpha"].astype(jnp.complex64))
+    if u_params.get("alpha_in") is not None:
+        g1 = g1 * jnp.exp(-1j * u_params["alpha_in"].astype(jnp.complex64))
     g2 = jnp.full((n,), jnp.asarray(scale, jnp.complex64))
     if u_params.get("alpha") is not None:
         g2 = g2 * jnp.exp(-1j * u_params["alpha"].astype(jnp.complex64))
@@ -89,7 +173,7 @@ def rfnn_linear(v_params: dict, atten: Array, u_params: dict, x: Array, *,
     ]).astype(jnp.float32)
 
     planes = ref.split_channels(x2)
-    call = givens_mesh.rfnn_linear_pallas_call(n, block_b, nb, interpret)
-    oe, oo = call(coef_v, coef_u, gains, *planes)
+    oe, oo = _rfnn_planes(n, bb, nb, interpret, coef_v, coef_u, gains,
+                          *planes)
     out = jnp.stack([oe, oo], axis=-1).reshape((-1, n))[:b_orig]
     return out.reshape(batch_shape + (n,))

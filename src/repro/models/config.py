@@ -68,6 +68,7 @@ class ModelConfig:
     linear_impl: str = "digital"   # digital | rfnn (analog tiled projections)
     rfnn_tile: int = 16
     rfnn_quantize: str | None = None
+    rfnn_backend: str = "reference"  # reference | pallas (fused mesh kernels)
 
     # --- training/runtime ---
     dtype: str = "bfloat16"

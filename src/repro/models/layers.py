@@ -112,7 +112,8 @@ def _analog_layers(cfg: ModelConfig, d: int, f: int):
     from repro.core.analog_linear import TiledAnalogLinear
     mk = lambda i, o: TiledAnalogLinear(
         in_dim=i, out_dim=o, tile_size=cfg.rfnn_tile,
-        quantize=cfg.rfnn_quantize, output="real")
+        quantize=cfg.rfnn_quantize, output="real",
+        backend=cfg.rfnn_backend)
     return {"wi": mk(d, f), "wg": mk(d, f), "wo": mk(f, d)}
 
 

@@ -38,10 +38,14 @@ class MnistRFNN:
     quantize: str | None = "table1"
     d_hidden: int = 8
     n_classes: int = 10
+    #: "pallas" runs the 8x8 mesh (fwd + bwd) through the fused kernels;
+    #: requires hardware=None (the imperfection model is reference-only).
+    backend: str = "reference"
 
     def __post_init__(self):
         mesh = AnalogUnitary(n=self.d_hidden, quantize=self.quantize,
-                             hardware=self.hardware, output="abs")
+                             hardware=self.hardware, output="abs",
+                             backend=self.backend)
         object.__setattr__(self, "mesh", mesh)
 
     def init(self, key):
@@ -77,7 +81,8 @@ class MnistRFNN:
 
 def train_mnist(x_tr, y_tr, x_te, y_te, *, analog=True, hardware=PROTOTYPE,
                 quantize="table1", epochs=100, batch=10, lr=0.005, seed=0,
-                log_every=20, noisy_train=False, schedule="algorithm1"):
+                log_every=20, noisy_train=False, schedule="algorithm1",
+                backend="reference"):
     """Paper hyperparameters: minibatch 10, lr 0.005, 100 epochs, shuffled.
 
     schedule:
@@ -97,11 +102,13 @@ def train_mnist(x_tr, y_tr, x_te, y_te, *, analog=True, hardware=PROTOTYPE,
                              hardware=hardware, quantize=None,
                              epochs=max(1, epochs * 2 // 3), batch=batch,
                              lr=lr, seed=seed, log_every=log_every,
-                             noisy_train=noisy_train, schedule="ste")
+                             noisy_train=noisy_train, schedule="ste",
+                             backend=backend)
         # stage 2: freeze mesh at nearest discrete codes; digital adapts,
         # alternating with DSPSA bursts on the device codes (Algorithm I:
         # "DSPSA -> dV; SGD optimizer -> dW" within each minibatch loop).
-        model = MnistRFNN(analog=True, hardware=hardware, quantize=quantize)
+        model = MnistRFNN(analog=True, hardware=hardware, quantize=quantize,
+                          backend=backend)
         params = dict(stage1["params"])
         stage2_epochs = max(1, epochs // 3)
         rounds = 3
@@ -125,7 +132,7 @@ def train_mnist(x_tr, y_tr, x_te, y_te, *, analog=True, hardware=PROTOTYPE,
         return res
 
     model = MnistRFNN(analog=analog, hardware=hardware if analog else None,
-                      quantize=quantize)
+                      quantize=quantize, backend=backend)
     params = model.init(jax.random.PRNGKey(seed))
     return _train_loop(model, params, x_tr, y_tr, x_te, y_te, epochs=epochs,
                        batch=batch, lr=lr, seed=seed, log_every=log_every,
@@ -134,19 +141,19 @@ def train_mnist(x_tr, y_tr, x_te, y_te, *, analog=True, hardware=PROTOTYPE,
 
 def _train_loop(model, params, x_tr, y_tr, x_te, y_te, *, epochs, batch, lr,
                 seed, log_every, noisy_train, freeze=()):
+    from repro.train.step import make_sgd_step
+
+    def loss_fn(p, xi, yi, ki):
+        return model.loss(p, xi, yi, ki if noisy_train else None)
+
+    sgd_step = make_sgd_step(loss_fn, lr=lr, freeze=freeze)
 
     @jax.jit
     def epoch_fn(params, xb, yb, key):
         """One epoch: scan over pre-shuffled minibatches."""
         def step(p, inp):
             xi, yi, ki = inp
-            (l, a), g = jax.value_and_grad(model.loss, has_aux=True)(
-                p, xi, yi, ki if noisy_train else None)
-            if freeze:
-                g = {k: (jax.tree.map(jnp.zeros_like, v) if k in freeze else v)
-                     for k, v in g.items()}
-            p = jax.tree.map(lambda w, gg: w - lr * gg, p, g)
-            return p, (l, a)
+            return sgd_step(p, xi, yi, ki)
         n_batches = xb.shape[0]
         keys = jax.random.split(key, n_batches)
         params, (ls, accs) = jax.lax.scan(step, params, (xb, yb, keys))

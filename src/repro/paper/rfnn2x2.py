@@ -23,6 +23,7 @@ from repro.core import dspsa as dspsa_lib
 from repro.core.cell import TABLE_I_PHASES_RAD
 from repro.core.hardware import HardwareModel, detect_magnitude, imperfect_cell_matrix
 from repro.data.toys import GAMMA
+from repro.kernels import ops as kernel_ops
 from repro.paper.prototype import PROTOTYPE
 
 
@@ -32,19 +33,46 @@ class RFNN2x2:
 
     hardware: HardwareModel = PROTOTYPE
     gamma: float = GAMMA
+    #: "pallas" evaluates the cell as a 2-channel mesh via the fused kernel.
+    #: The kernel models the ideal cell, so it engages only when the
+    #: hardware model's hybrids/loss are ideal (phase-shifter noise and the
+    #: detector chain are modeled on both paths); a non-ideal model keeps
+    #: the reference path — same fallback contract as the analog layers.
+    backend: str = "reference"
+
+    def _kernel_exact(self) -> bool:
+        hw = self.hardware
+        return (hw.hybrid_imbalance == 0.0 and hw.hybrid_phase_err == 0.0
+                and hw.cell_loss_db == 0.0)
 
     def device_output(self, theta_code, phi_code, x, key=None):
         """Measured |V| at (P2, P3) for inputs x [N, 2] (volts, unscaled)."""
         theta = jnp.take(jnp.asarray(TABLE_I_PHASES_RAD, jnp.float32),
                          theta_code)
         phi = jnp.take(jnp.asarray(TABLE_I_PHASES_RAD, jnp.float32), phi_code)
-        t = imperfect_cell_matrix(theta, phi, self.hardware, key)
         # feed V1+ = x[:,1] (y-axis), V4+ = x[:,0] (x-axis) per Fig. 9 axes
         vin = jnp.stack([x[:, 1], x[:, 0]], axis=-1).astype(jnp.complex64)
         vin = vin * self.gamma
+        kdet = key if key is None else jax.random.fold_in(key, 1)
+        if self.backend == "pallas" and self._kernel_exact():
+            if key is not None and self.hardware.phase_sigma > 0:
+                k1, k2 = jax.random.split(key)
+                theta = theta + self.hardware.phase_sigma * \
+                    jax.random.normal(k1, jnp.shape(theta))
+                phi = phi + self.hardware.phase_sigma * \
+                    jax.random.normal(k2, jnp.shape(phi))
+            # the single cell as a 2-channel mesh: column 0 holds the cell,
+            # column 1 is the (inactive) odd column of the Clements rectangle
+            params = {
+                "theta": jnp.stack([jnp.reshape(theta, (1,)), jnp.zeros((1,))]),
+                "phi": jnp.stack([jnp.reshape(phi, (1,)), jnp.zeros((1,))]),
+            }
+            vout = kernel_ops.mesh_apply(params, vin, n=2, block_b=8)
+            mag = detect_magnitude(vout, self.hardware, kdet)
+            return mag / self.gamma
+        t = imperfect_cell_matrix(theta, phi, self.hardware, key)
         vout = vin @ t.T
-        mag = detect_magnitude(vout, self.hardware,
-                               key if key is None else jax.random.fold_in(key, 1))
+        mag = detect_magnitude(vout, self.hardware, kdet)
         return mag / self.gamma  # post scaling back (Fig. 11)
 
     def predict(self, params, theta_code, phi_code, x, key=None):

@@ -23,6 +23,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Array = jax.Array
 
+if getattr(jax, "shard_map", None) is not None:  # jax >= 0.6 top-level API
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:  # the experimental location (and arg name) of older releases
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    _shard_map = functools.partial(_shard_map_experimental, check_rep=False)
+
 
 def pipeline_forward(block_fn: Callable, mesh: Mesh, axis: str,
                      stage_params, x_microbatches: Array) -> Array:
@@ -72,10 +79,8 @@ def pipeline_forward(block_fn: Callable, mesh: Mesh, axis: str,
         return jax.lax.psum(outs, axis)
 
     spec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(
-        stage_program, mesh=mesh,
-        in_specs=(spec_params, P()), out_specs=P(),
-        check_vma=False)
+    fn = _shard_map(stage_program, mesh=mesh,
+                    in_specs=(spec_params, P()), out_specs=P())
     return fn(stage_params, x_microbatches)
 
 

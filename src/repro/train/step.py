@@ -4,6 +4,12 @@ Supports microbatched gradient accumulation (``accum_steps``): the global
 batch is split along the batch axis and scanned, which divides activation
 memory by the accumulation factor while keeping the same global batch
 semantics — the standard memory/perf lever for the train_4k cells.
+
+:func:`make_sgd_step` is the minibatch-SGD step shared by the paper
+pipelines (the MNIST RFNN trains with it).  Gradients flow through
+whatever backend the model's layers select — with ``backend="pallas"``
+on the analog layers the backward pass runs the fused Pallas kernel VJPs
+(``repro.kernels``), so training and inference share the same hot loop.
 """
 
 from __future__ import annotations
@@ -38,6 +44,26 @@ def init_state(model: Model, optimizer: AdamW, key) -> TrainState:
 def state_specs(model: Model, optimizer: AdamW):
     pspecs = model.param_specs()
     return TrainState(params=pspecs, opt=optimizer.state_specs(pspecs))
+
+
+def make_sgd_step(loss_fn, lr: float, freeze: tuple[str, ...] = ()):
+    """Plain minibatch-SGD step: ``step(params, *batch) -> (params, (loss, aux))``.
+
+    ``loss_fn(params, *batch) -> (loss, aux)``; top-level param groups named
+    in ``freeze`` get zeroed gradients (the paper's stage-2 "deployed
+    device" training where the programmed mesh codes are held fixed).
+    """
+
+    def sgd_step(params, *batch):
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, *batch)
+        if freeze:
+            grads = {k: (jax.tree.map(jnp.zeros_like, v) if k in freeze else v)
+                     for k, v in grads.items()}
+        params = jax.tree.map(lambda w, g: w - lr * g, params, grads)
+        return params, (loss, aux)
+
+    return sgd_step
 
 
 def make_train_step(model: Model, optimizer: AdamW, accum_steps: int = 1):

@@ -1,0 +1,98 @@
+"""Offline-safe property-testing shim with a hypothesis-compatible surface.
+
+The suite's property tests use ``given``/``settings``/``strategies``.  When
+the real `hypothesis` package is installed it is used unchanged; otherwise
+this module provides a tiny drop-in backed by seeded ``numpy.random`` so the
+suite collects and runs in a fully offline container (no pip installs).
+
+The shim draws ``max_examples`` pseudo-random examples per test with a seed
+derived from the test name, so runs are deterministic and failures are
+reproducible; on failure the falsifying example is included in the error.
+Only the strategy surface this repo uses is implemented: ``integers``,
+``floats``, ``sampled_from`` and ``booleans``.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        """The subset of ``hypothesis.strategies`` the suite uses."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            items = list(elements)
+            return _Strategy(
+                lambda rng: items[int(rng.integers(0, len(items)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    strategies = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        """Decorator recording the example budget on the ``given`` runner."""
+
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        """Run the test over seeded pseudo-random draws of each strategy."""
+
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_propcheck_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__name__.encode("utf-8")))
+                for i in range(n):
+                    kwargs = {k: s.example(rng) for k, s in strats.items()}
+                    try:
+                        fn(**kwargs)
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"{fn.__name__} falsified on example {i}: "
+                            f"{kwargs!r}") from exc
+
+            # plain attribute copies: functools.wraps would leak the wrapped
+            # signature and make pytest treat the draws as fixtures
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco

@@ -1,0 +1,30 @@
+"""Shared test configuration: CPU-only JAX, deterministic seeds, markers.
+
+The kernels run in Pallas interpret mode off-TPU (the ``ops`` wrappers
+default to it), so forcing the CPU platform here gives every test module
+the same interpret-mode defaults without per-file boilerplate.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+# pin the platform before jax initializes any backend
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (deselect with -m 'not slow')")
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_numpy_seed():
+    """Reset the legacy numpy global RNG per test for reproducibility."""
+    np.random.seed(0)
+    yield

@@ -113,11 +113,16 @@ def test_detector_floor():
 # ---------------------------------------------------------------------------
 
 def test_analog_unitary_trains():
-    """A few SGD steps reduce a matching loss through the analog layer."""
+    """A few SGD steps reduce a matching loss through the analog layer.
+
+    The target |U x| for a random other mesh U is realizable by the layer,
+    so the loss has no structural floor and SGD must make real progress.
+    """
     layer = AnalogUnitary(n=4, output="abs")
     params = layer.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
-    target = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (16, 4)))
+    target_params = layer.init(jax.random.PRNGKey(2))
+    target = layer.apply(target_params, x)
 
     def loss(p):
         return jnp.mean((layer.apply(p, x) - target) ** 2)
@@ -127,9 +132,7 @@ def test_analog_unitary_trains():
         lambda q, g: q - 0.2 * g, p, jax.grad(loss)(p)))
     for _ in range(150):
         params = step(params)
-    # the unitary layer is norm-preserving so the random-target loss has a
-    # structural floor; assert a solid reduction, not an exact fit.
-    assert float(loss(params)) < 0.8 * l0
+    assert float(loss(params)) < 0.5 * l0
 
 
 def test_analog_linear_program_matches_matmul():

@@ -1,0 +1,100 @@
+"""Checkpoint codec coverage: zstd when available, zlib always.
+
+``repro.checkpoint`` must import and roundtrip without the optional
+``zstandard`` package (offline container); shards carry a codec header so
+restore dispatches on what was actually written.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint import manager as manager_lib
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 3)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32)}}
+
+
+def _roundtrip(tmp_path, codec):
+    mgr = CheckpointManager(tmp_path, codec=codec)
+    tree = _tree()
+    mgr.save(7, tree, data_step=42)
+    restored, meta = mgr.restore(None, like=jax.tree.map(jnp.zeros_like, tree))
+    assert meta == {"step": 7, "data_step": 42}
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, restored)
+    return mgr
+
+
+@pytest.mark.parametrize("codec", ["zlib", "zstd"])
+def test_roundtrip_each_codec(tmp_path, codec):
+    if codec == "zstd" and manager_lib.zstandard is None:
+        pytest.skip("zstandard not installed in this environment")
+    _roundtrip(tmp_path, codec)
+
+
+def test_default_codec_roundtrips_without_zstandard(tmp_path):
+    """The default codec always works: zstd if installed, else zlib."""
+    mgr = _roundtrip(tmp_path, None)
+    expected = "zstd" if manager_lib.zstandard is not None else "zlib"
+    assert mgr.codec == expected
+
+
+def test_shard_header_records_codec(tmp_path):
+    mgr = CheckpointManager(tmp_path, codec="zlib")
+    mgr.save(1, _tree())
+    blob = (mgr._step_dir(1) / "host_000.ckpt").read_bytes()
+    assert blob[:4] == manager_lib._MAGIC
+    assert blob[4:8].rstrip(b"\0") == b"zlib"
+
+
+def test_legacy_zst_suffix_still_restores(tmp_path):
+    """Pre-rename checkpoints stored shards as host_NNN.zst."""
+    mgr = CheckpointManager(tmp_path, codec="zlib")
+    tree = _tree(5)
+    mgr.save(2, tree)
+    d = mgr._step_dir(2)
+    (d / "host_000.ckpt").rename(d / "host_000.zst")
+    restored, _ = mgr.restore(2, like=jax.tree.map(jnp.zeros_like, tree))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, restored)
+
+
+def test_zstd_without_library_fails_fast():
+    """Explicit codec='zstd' on a host without zstandard must fail at
+    construction, not silently inside save_async's worker thread."""
+    if manager_lib.zstandard is not None:
+        pytest.skip("zstandard installed; the fail-fast path is inert")
+    with pytest.raises(RuntimeError, match="zstandard"):
+        CheckpointManager("/tmp/unused-ckpt-dir", codec="zstd")
+
+
+def test_manifest_records_codec(tmp_path):
+    import json
+    mgr = CheckpointManager(tmp_path, codec="zlib")
+    mgr.save(1, _tree())
+    manifest = json.loads((mgr._step_dir(1) / "manifest.json").read_text())
+    assert manifest["codec"] == "zlib"
+
+
+def test_cross_codec_restore(tmp_path):
+    """A shard written with zlib restores through a default-codec manager
+    (the header, not the manager setting, selects the decompressor)."""
+    tree = _tree(3)
+    CheckpointManager(tmp_path, codec="zlib").save(5, tree)
+    restored, _ = CheckpointManager(tmp_path).restore(
+        5, like=jax.tree.map(jnp.zeros_like, tree))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, restored)
+
+
+def test_unknown_codec_rejected(tmp_path):
+    with pytest.raises(ValueError, match="codec"):
+        CheckpointManager(tmp_path, codec="lz4")

@@ -38,7 +38,10 @@ print("PIPELINE_OK")
 
 
 def test_gpipe_matches_sequential():
+    # JAX_PLATFORMS=cpu: without it, a host that ships libtpu spends minutes
+    # probing for TPU metadata inside the scrubbed subprocess environment.
     r = subprocess.run([sys.executable, "-c", _PROGRAM], capture_output=True,
                        text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr
