@@ -10,12 +10,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_call
+from benchmarks.common import SMOKE, row, time_call
 from repro.core import mesh as mesh_lib
 from repro.kernels import ops, ref
 
 
-def mesh_kernel_sweep(sizes=(16, 64, 256), batch=256) -> list[str]:
+def mesh_kernel_sweep(sizes=None, batch=None) -> list[str]:
+    sizes = sizes or ((16,) if SMOKE else (16, 64, 256))
+    batch = batch or (32 if SMOKE else 256)
     rows = []
     for n in sizes:
         plan = mesh_lib.clements_plan(n)
@@ -34,7 +36,9 @@ def mesh_kernel_sweep(sizes=(16, 64, 256), batch=256) -> list[str]:
     return rows
 
 
-def fused_rfnn_linear(n=64, batch=256) -> list[str]:
+def fused_rfnn_linear(n=None, batch=None) -> list[str]:
+    n = n or (16 if SMOKE else 64)
+    batch = batch or (32 if SMOKE else 256)
     plan = mesh_lib.clements_plan(n)
     vp = mesh_lib.init_mesh_params(jax.random.PRNGKey(0), plan)
     up = mesh_lib.init_mesh_params(jax.random.PRNGKey(1), plan)
@@ -54,14 +58,17 @@ def fused_rfnn_linear(n=64, batch=256) -> list[str]:
                 f"hbm_bytes {hbm_fused} vs {hbm_unfused} (3x saved)")]
 
 
-def mesh_kernel_fwd_bwd(sizes=(16, 64), batch=128) -> list[str]:
+def mesh_kernel_fwd_bwd(sizes=None, batch=None) -> list[str]:
     """fwd+bwd through the mesh: kernel custom-VJP vs reference autodiff.
 
-    The kernel backward is one reversed-column Pallas sweep (unitarity
-    trick, DESIGN.md) instead of lax.scan's stored-intermediate transpose;
-    the derived column reports the residual HBM bytes autodiff would have
-    stored per column and the max grad deviation between the two paths.
+    The kernel backward is one reversed-column Pallas sweep
+    (inverse/adjoint, DESIGN.md) instead of lax.scan's stored-intermediate
+    transpose; the derived column reports the residual HBM bytes autodiff
+    would have stored per column and the max grad deviation between the
+    two paths.
     """
+    sizes = sizes or ((16,) if SMOKE else (16, 64))
+    batch = batch or (64 if SMOKE else 128)
     rows = []
     for n in sizes:
         plan = mesh_lib.clements_plan(n)
@@ -91,8 +98,78 @@ def mesh_kernel_fwd_bwd(sizes=(16, 64), batch=128) -> list[str]:
     return rows
 
 
-def rfnn_linear_fwd_bwd(n=16, batch=128) -> list[str]:
+def mesh_fwd_bwd_nonideal(sizes=None, batch=None) -> list[str]:
+    """fwd+bwd with the hardware model and a Reck layout, both paths.
+
+    The paper-faithful configurations (imperfect hybrids, per-cell
+    insertion loss, triangular analytic programs) used to fall back to the
+    reference path; these rows benchmark them *through the generalized
+    kernel* (inverse/adjoint backward) against reference autodiff of
+    ``apply_mesh_hw`` / ``apply_mesh``.
+    """
+    from repro.core import decompose
+    from repro.core import hardware as hw_lib
+
+    sizes = sizes or ((8,) if SMOKE else (8, 16))
+    batch = batch or (64 if SMOKE else 128)
+    hw = hw_lib.HardwareModel(phase_sigma=0.0, detector_sigma=0.0)
+    rows = []
+    for n in sizes:
+        k = jax.random.PRNGKey(0)
+        x = (jax.random.normal(k, (batch, n))
+             + 1j * jax.random.normal(jax.random.fold_in(k, 1),
+                                      (batch, n))).astype(jnp.complex64)
+        cplan = mesh_lib.clements_plan(n)
+        cparams = mesh_lib.init_mesh_params(jax.random.PRNGKey(n), cplan)
+        rplan, rparams = decompose.reck_program(
+            decompose.random_unitary(n, seed=n))
+        for tag, plan, params, hmodel in [
+                ("hw", cplan, cparams, hw),
+                ("reck", rplan, rparams, None)]:
+            def loss_k(p, xx, plan=plan, hmodel=hmodel, n=n):
+                return jnp.sum(jnp.abs(ops.mesh_apply(
+                    p, xx, n=n, plan=plan, hardware=hmodel, block_b=64)))
+
+            def loss_r(p, xx, plan=plan, hmodel=hmodel):
+                if hmodel is not None:
+                    y = hw_lib.apply_mesh_hw(plan, p, xx, hmodel)
+                else:
+                    y = mesh_lib.apply_mesh(plan, p, xx)
+                return jnp.sum(jnp.abs(y))
+
+            k_fn = jax.jit(jax.grad(loss_k))
+            r_fn = jax.jit(jax.grad(loss_r))
+            us_k = time_call(k_fn, params, x, iters=3)
+            us_r = time_call(r_fn, params, x, iters=3)
+            gk, gr = k_fn(params, x), r_fn(params, x)
+            err = max(float(jnp.max(jnp.abs(a - b)))
+                      for a, b in zip(jax.tree.leaves(gk),
+                                      jax.tree.leaves(gr)))
+            rows.append(row(f"mesh_fwd_bwd_{tag}_n{n}", us_k,
+                            f"ref_autodiff_us={us_r:.1f};"
+                            f"max_grad_err={err:.1e}"))
+    return rows
+
+
+def mc_yield_sweep() -> list[str]:
+    """Monte-Carlo hardware-yield sweep, vmapped over the Pallas kernel."""
+    from repro.paper.efficiency import monte_carlo_yield
+
+    n_draws = 8 if SMOKE else 32
+    import time as _time
+    monte_carlo_yield(n=8, n_draws=n_draws, backend="pallas")  # warm caches
+    t0 = _time.perf_counter()
+    res = monte_carlo_yield(n=8, n_draws=n_draws, backend="pallas")
+    us = (_time.perf_counter() - t0) * 1e6
+    return [row("mc_yield_n8", us,
+                f"yield={res['yield']:.2f};draws={n_draws};"
+                f"mean_err={res['mean_error']:.3f};"
+                f"worst_err={res['worst_error']:.3f}")]
+
+
+def rfnn_linear_fwd_bwd(n=16, batch=None) -> list[str]:
     """fwd+bwd through the fused analog linear layer, both paths."""
+    batch = batch or (64 if SMOKE else 128)
     plan = mesh_lib.clements_plan(n)
     vp = mesh_lib.init_mesh_params(jax.random.PRNGKey(0), plan)
     up = mesh_lib.init_mesh_params(jax.random.PRNGKey(1), plan)
@@ -122,8 +199,9 @@ def rfnn_linear_fwd_bwd(n=16, batch=128) -> list[str]:
                 f"residual_hbm_bytes {hbm_kernel} vs {hbm_autodiff}")]
 
 
-def flash_attention_kernel(s=512, hd=64, h=4, b=2) -> list[str]:
+def flash_attention_kernel(s=None, hd=64, h=4, b=2) -> list[str]:
     """Flash attention kernel vs dense-softmax reference (interpret mode)."""
+    s = s or (256 if SMOKE else 512)
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.ref import flash_attention_ref
 
@@ -145,4 +223,5 @@ def flash_attention_kernel(s=512, hd=64, h=4, b=2) -> list[str]:
 
 
 ALL = [mesh_kernel_sweep, fused_rfnn_linear, mesh_kernel_fwd_bwd,
-       rfnn_linear_fwd_bwd, flash_attention_kernel]
+       mesh_fwd_bwd_nonideal, mc_yield_sweep, rfnn_linear_fwd_bwd,
+       flash_attention_kernel]

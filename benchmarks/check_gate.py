@@ -1,0 +1,60 @@
+"""Performance gate over a benchmark JSON document (CI smoke job).
+
+Fails (exit 1) when the Pallas fwd+bwd mesh path is slower than reference
+autodiff at N=16 — the regression this repo's kernels exist to prevent.
+The reference timing rides in each row's derived column as
+``ref_autodiff_us=...``.
+
+    PYTHONPATH=src python -m benchmarks.check_gate BENCH_kernels.json
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+GATED_ROWS = ("mesh_fwd_bwd_n16",)
+
+
+def check(doc: dict) -> list[str]:
+    problems = []
+    rows = {r["name"]: r for r in doc.get("rows", [])}
+    for name in GATED_ROWS:
+        r = rows.get(name)
+        if r is None:
+            problems.append(f"{name}: gated row missing from document")
+            continue
+        us = r.get("us_per_call")
+        m = re.search(r"ref_autodiff_us=([0-9.]+)", r.get("derived", ""))
+        if us is None or m is None:
+            problems.append(f"{name}: no kernel/reference timing pair")
+            continue
+        ref_us = float(m.group(1))
+        if us > ref_us:
+            problems.append(
+                f"{name}: Pallas fwd+bwd {us:.1f}us slower than "
+                f"reference autodiff {ref_us:.1f}us")
+    if doc.get("failures"):
+        problems.append(f"benchmark run recorded {doc['failures']} failures")
+    return problems
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        doc = json.load(f)
+    problems = check(doc)
+    for p in problems:
+        print(f"GATE FAIL: {p}", file=sys.stderr)
+    if not problems:
+        print("benchmark gate passed: kernel fwd+bwd beats reference "
+              "autodiff on every gated row")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,9 +2,15 @@
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
+
+#: Tiny-configuration mode for CI smoke runs: benchmarks shrink sizes /
+#: iteration counts so the whole sweep finishes in minutes on a shared
+#: runner while still exercising every code path.  Set BENCH_SMOKE=1.
+SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -1,14 +1,20 @@
 """Benchmark harness entry point: one benchmark per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows, and optionally writes the
+same rows as a JSON document (``--json``) for trajectory tracking — the
+CI smoke job uploads ``BENCH_kernels.json`` per commit.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run --only fig15
+    BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run \
+        --only kernel --json BENCH_kernels.json        # CI tiny config
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -17,15 +23,32 @@ import jax
 jax.config.update("jax_platform_name", "cpu")
 
 
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    entry: dict = {"name": name, "derived": derived}
+    entry["us_per_call"] = float(us) if us else None
+    return entry
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark function names")
+    ap.add_argument("--suite", default="all",
+                    choices=("all", "paper", "kernels"),
+                    help="benchmark module to run")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON document")
     args = ap.parse_args(argv)
 
     from benchmarks import bench_kernels, bench_paper
+    from benchmarks.common import SMOKE
 
-    benches = list(bench_paper.ALL) + list(bench_kernels.ALL)
+    benches = []
+    if args.suite in ("all", "paper"):
+        benches += list(bench_paper.ALL)
+    if args.suite in ("all", "kernels"):
+        benches += list(bench_kernels.ALL)
     if args.only:
         benches = [b for b in benches if args.only in b.__name__]
         if not benches:
@@ -34,11 +57,13 @@ def main(argv=None) -> int:
 
     print("name,us_per_call,derived")
     failures = 0
+    entries: list[dict] = []
     for bench in benches:
         t0 = time.time()
         try:
             for line in bench():
                 print(line, flush=True)
+                entries.append(_parse_row(line))
         except AssertionError as e:
             failures += 1
             print(f"{bench.__name__},,FAILED_ASSERT:{e}", flush=True)
@@ -48,6 +73,24 @@ def main(argv=None) -> int:
                   flush=True)
         dt = time.time() - t0
         print(f"# {bench.__name__} done in {dt:.1f}s", file=sys.stderr)
+
+    if args.json:
+        doc = {
+            "schema": 1,
+            "smoke": SMOKE,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "platform": {
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+            },
+            "failures": failures,
+            "rows": entries,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {len(entries)} rows to {args.json}", file=sys.stderr)
     return 1 if failures else 0
 
 

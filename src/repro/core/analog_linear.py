@@ -18,9 +18,13 @@ made exactly as faithful as the prototype.
 ``backend="pallas"`` routes both inference *and* training through the fused
 Pallas mesh kernels (``repro.kernels``), which carry custom VJPs — the
 reference ``lax.scan`` path and the kernel path are interchangeable
-gradient-for-gradient.  The kernel path covers the ideal-physics simulation
-on rectangular Clements layouts; the per-cell hardware-imperfection model
-and analytically programmed Reck layouts keep the reference path.
+gradient-for-gradient.  The kernel path covers the full configuration
+space: ideal physics *and* the per-cell hardware-imperfection model
+(imperfect hybrids, insertion loss, ``key``-sampled phase noise), on
+rectangular Clements layouts *and* analytically programmed Reck programs
+(re-scheduled into kernel parity columns by ``repro.kernels.schedule``).
+There is no reference fallback — both backends consume the same keys, so
+they are draw-for-draw comparable under noise.
 """
 
 from __future__ import annotations
@@ -41,15 +45,6 @@ from repro.kernels import ops as kernel_ops
 Array = jax.Array
 OutputMode = Literal["abs", "real", "complex"]
 Backend = Literal["reference", "pallas"]
-
-
-def _is_rect_clements(plan: mesh_lib.MeshPlan) -> bool:
-    """True when the plan has the rectangular layout the kernels assume."""
-    if plan.n_columns != plan.n:
-        return False
-    rect = mesh_lib.clements_plan(plan.n)
-    return (np.array_equal(plan.top, rect.top)
-            and np.array_equal(plan.active, rect.active))
 
 
 def _as_complex(x: Array) -> Array:
@@ -107,16 +102,17 @@ class AnalogUnitary:
     def apply(self, params: dict, x: Array, *, key: Array | None = None) -> Array:
         p = self.effective_params(params)
         xc = _as_complex(x)
-        if self.hardware is not None:
-            # per-cell imperfection model: reference path only
-            kmesh, kdet = (jax.random.split(key) if key is not None else (None, None))
-            y = hw_lib.apply_mesh_hw(self.plan, p, xc, self.hardware, kmesh)
-            return _readout(y, self.output, self.hardware, kdet)
+        kmesh, kdet = (jax.random.split(key)
+                       if key is not None and self.hardware is not None
+                       else (None, None))
         if self.backend == "pallas":
-            y = kernel_ops.mesh_apply(p, xc, n=self.n)
+            y = kernel_ops.mesh_apply(p, xc, n=self.n, plan=self.plan,
+                                      hardware=self.hardware, key=kmesh)
+        elif self.hardware is not None:
+            y = hw_lib.apply_mesh_hw(self.plan, p, xc, self.hardware, kmesh)
         else:
             y = mesh_lib.apply_mesh(self.plan, p, xc)
-        return _readout(y, self.output, None, None)
+        return _readout(y, self.output, self.hardware, kdet)
 
     def matrix(self, params: dict) -> Array:
         return mesh_lib.mesh_matrix(self.plan, self.effective_params(params))
@@ -143,7 +139,6 @@ class AnalogLinear:
         plan = mesh_lib.clements_plan(n)
         object.__setattr__(self, "_u_plan", plan)
         object.__setattr__(self, "_v_plan", plan)
-        object.__setattr__(self, "_plans_rect", True)
 
     @property
     def u_plan(self) -> mesh_lib.MeshPlan:
@@ -181,25 +176,34 @@ class AnalogLinear:
         u_p, v_p = self._quant(params["u"]), self._quant(params["v"])
         atten = jax.nn.sigmoid(params["atten_logit"]).astype(jnp.complex64)
         scale = jax.nn.softplus(params["log_scale"])
+        kv, ku, kd = (jax.random.split(key, 3)
+                      if key is not None and self.hardware is not None
+                      else (None, None, None))
+        if self.backend == "pallas":
+            if self.output == "abs":
+                # one fused kernel: V-mesh -> diag -> U-mesh -> |detect|;
+                # detector noise/floor compose on the magnitudes outside
+                y = kernel_ops.rfnn_linear(
+                    v_p, atten, u_p, xc, n=self.n, scale=scale,
+                    v_plan=self.v_plan, u_plan=self.u_plan,
+                    hardware=self.hardware, key_v=kv, key_u=ku)
+                # kernel output is the nonnegative magnitude, so the "abs"
+                # readout (detector noise/floor included) applies directly
+                return _readout(y[..., : self.out_dim], self.output,
+                                self.hardware, kd)
+            h = kernel_ops.mesh_apply(v_p, xc, n=self.n, plan=self.v_plan,
+                                      hardware=self.hardware, key=kv)
+            h = h * atten
+            y = kernel_ops.mesh_apply(u_p, h, n=self.n, plan=self.u_plan,
+                                      hardware=self.hardware, key=ku)
+            y = scale * y[..., : self.out_dim]
+            return _readout(y, self.output, self.hardware, kd)
         if self.hardware is not None:
-            kv, ku, kd = (jax.random.split(key, 3) if key is not None
-                          else (None, None, None))
             h = hw_lib.apply_mesh_hw(self.v_plan, v_p, xc, self.hardware, kv)
             h = h * atten
             y = hw_lib.apply_mesh_hw(self.u_plan, u_p, h, self.hardware, ku)
             y = scale * y[..., : self.out_dim]
             return _readout(y, self.output, self.hardware, kd)
-        if self.backend == "pallas" and self._plans_rect:  # type: ignore[attr-defined]
-            if self.output == "abs":
-                # one fused kernel: V-mesh -> diag -> U-mesh -> |detect|
-                y = kernel_ops.rfnn_linear(v_p, atten, u_p, xc, n=self.n,
-                                           scale=scale)
-                return y[..., : self.out_dim]
-            h = kernel_ops.mesh_apply(v_p, xc, n=self.n)
-            h = h * atten
-            y = kernel_ops.mesh_apply(u_p, h, n=self.n)
-            y = scale * y[..., : self.out_dim]
-            return _readout(y, self.output, None, None)
         h = mesh_lib.apply_mesh(self.v_plan, v_p, xc)
         h = h * atten
         y = mesh_lib.apply_mesh(self.u_plan, u_p, h)
@@ -222,10 +226,6 @@ class AnalogLinear:
         }
         object.__setattr__(self, "_u_plan", syn.u_plan)
         object.__setattr__(self, "_v_plan", syn.v_plan)
-        # rect-ness decided once per (re)programming, not per apply
-        object.__setattr__(self, "_plans_rect",
-                           _is_rect_clements(syn.u_plan)
-                           and _is_rect_clements(syn.v_plan))
         return params
 
     def n_cells(self) -> int:

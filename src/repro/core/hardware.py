@@ -49,8 +49,10 @@ class HardwareModel:
     detector_sigma: float = 0.01
 
     @property
-    def cell_gain(self) -> float:
-        return float(10.0 ** (-self.cell_loss_db / 20.0))
+    def cell_gain(self):
+        # no float() cast: fields may be traced arrays (Monte-Carlo yield
+        # sweeps construct HardwareModel inside vmap)
+        return 10.0 ** (-self.cell_loss_db / 20.0)
 
 
 IDEAL = HardwareModel(hybrid_imbalance=0.0, hybrid_phase_err=0.0,
@@ -60,10 +62,13 @@ IDEAL = HardwareModel(hybrid_imbalance=0.0, hybrid_phase_err=0.0,
 
 def imperfect_hybrid(hw: HardwareModel) -> Array:
     """Forward block of a lossy, imbalanced quadrature hybrid."""
-    e = hw.hybrid_imbalance
-    thru = (1.0 + e) * jnp.exp(1j * hw.hybrid_phase_err) * 1j
-    coup = (1.0 - e) + 0j
-    m = jnp.array([[thru, coup], [coup, thru]], jnp.complex64)
+    e = jnp.asarray(hw.hybrid_imbalance, jnp.float32)
+    thru = ((1.0 + e) * jnp.exp(1j * jnp.asarray(hw.hybrid_phase_err,
+                                                 jnp.float32)) * 1j)
+    coup = (1.0 - e).astype(jnp.complex64)
+    # built with stacks (not jnp.array literals) so traced fields vmap
+    m = jnp.stack([jnp.stack([thru, coup], -1),
+                   jnp.stack([coup, thru], -1)], -2).astype(jnp.complex64)
     # keep passive: renormalize worst-case row power to <= 1, then 3-dB split
     scale = jnp.sqrt(jnp.max(jnp.sum(jnp.abs(m) ** 2, axis=1)))
     return -m / scale
@@ -74,10 +79,13 @@ def imperfect_cell_matrix(theta: Array, phi: Array, hw: HardwareModel,
     """t(theta, phi) under the hardware model; broadcasts like cell_matrix."""
     theta = jnp.asarray(theta, jnp.float32)
     phi = jnp.asarray(phi, jnp.float32)
-    if key is not None and hw.phase_sigma > 0:
+    if key is not None:
+        # no Python bool on phase_sigma: the field may be traced (vmap'd
+        # yield sweeps); sigma == 0 adds exact zeros, same numerics
+        sigma = jnp.asarray(hw.phase_sigma, jnp.float32)
         k1, k2 = jax.random.split(key)
-        theta = theta + hw.phase_sigma * jax.random.normal(k1, theta.shape)
-        phi = phi + hw.phase_sigma * jax.random.normal(k2, phi.shape)
+        theta = theta + sigma * jax.random.normal(k1, theta.shape)
+        phi = phi + sigma * jax.random.normal(k2, phi.shape)
     h = imperfect_hybrid(hw)
 
     def shifter(p):

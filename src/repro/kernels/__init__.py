@@ -1,14 +1,17 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-givens_mesh      — the paper's mesh MVM (columns of 2x2 complex rotations),
-                   forward and backward (custom-VJP kernels, DESIGN.md)
+givens_mesh      — the paper's mesh MVM (columns of arbitrary 2x2 complex
+                   cells — ideal or hardware-imperfect), forward and
+                   backward (custom-VJP kernels, DESIGN.md)
+schedule         — static parity-column schedules lowering any adjacent-pair
+                   MeshPlan (Clements, Reck, packed) onto the kernels
 flash_attention  — fused attention (motivated by the roofline's memory term)
 ops              — jitted, differentiable public wrappers
 ref              — pure-jnp oracles (the allclose ground truth)
 EXAMPLE.md       — scaffold notes
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, schedule
 from repro.kernels.flash_attention import flash_attention
 
-__all__ = ["ops", "ref", "flash_attention"]
+__all__ = ["ops", "ref", "schedule", "flash_attention"]

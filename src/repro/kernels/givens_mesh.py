@@ -4,33 +4,40 @@ TPU adaptation of the analog propagation: one mesh column is a set of
 independent 2x2 complex rotations on channel pairs — pure VPU elementwise
 work once channels are de-interleaved into even/odd (re, im) planes of shape
 [batch, N/2].  The kernels keep a batch panel **resident in VMEM** and run
-all N columns in-register/VMEM, the TPU analogue of the RF signal passing
+all C columns in-register/VMEM, the TPU analogue of the RF signal passing
 through all S = N(N-1)/2 cells without intermediate storage (HBM traffic is
 2 reads + 2 writes of the panel total, instead of per-column round trips).
 
 Layout choices (see DESIGN.md):
   * planes [B, P] with P = N/2 on the lane dimension (128-aligned for N>=256);
   * coefficients [C, 8, P]: 8 rows = (t00, t01, t10, t11) x (re, im) per pair
-    slot, broadcast over the batch sublanes;
-  * odd columns act on (odd_i, even_{i+1}) via shifted slices — static
-    slicing only, no gathers.
+    slot, broadcast over the batch sublanes.  The 2x2 cells are **arbitrary
+    complex matrices** — ideal unitary rotations and the hardware model's
+    lossy/imbalanced cells share the same layout and the same sweep;
+  * a [C, 1] int32 parity input selects each column's pairing: parity 0
+    rotates (even_i, odd_i), parity 1 rotates (odd_i, even_{i+1}) via
+    shifted slices — static slicing only, no gathers.  Any adjacent-pair
+    layout (Clements rectangle, triangular Reck programs, greedy-packed
+    schedules) lowers to a parity sequence (see ``repro.kernels.schedule``).
 
 Kernels:
-  * ``mesh_kernel`` — one mesh (the unitary T(N) of paper Eq. 28).
+  * ``mesh_kernel`` — one mesh (the paper's T(N), Eq. 28, ideal or not).
   * ``rfnn_linear_kernel`` — fused analog linear layer
     V-mesh -> diag gain -> U-mesh -> |detect| (paper Eq. 31 + Fig. 14),
     one VMEM residency for the whole layer.
   * ``mesh_bwd_kernel`` / ``rfnn_linear_bwd_kernel`` — the custom VJPs.
-    Because every mesh column is unitary, the backward pass re-runs the
-    column sequence *in reverse* with conjugate-transposed coefficients:
-    that single reversed sweep simultaneously (a) recomputes each column's
-    input state from the saved forward output (no per-column residuals in
-    HBM) and (b) propagates the cotangent, while per-column coefficient
-    gradients are accumulated into a [C, 8, P] output that is revisited
-    across batch-grid steps.  See DESIGN.md ("Backward pass").
+    The backward pass re-runs the column sequence *in reverse*, carrying
+    two coefficient tensors: the per-cell analytic **2x2 inverse** rebuilds
+    each column's input state from the saved forward output (for unitary
+    cells this degenerates to the PR-1 conjugate-transpose trick), while
+    the **adjoint** (conjugate transpose) propagates the cotangent — the
+    transpose of the real-representation Jacobian of ``y = T x`` is ``T^H``
+    for *any* complex ``T``, unitary or not.  Per-column coefficient
+    gradients are accumulated into a [C, 8, P] output revisited across
+    batch-grid steps.  See DESIGN.md ("Backward pass").
 
-Validated against ``ref.py`` in interpret mode (this container is CPU-only;
-TPU is the compilation target).
+Validated against ``ref.py`` and the hardware-model reference in interpret
+mode (this container is CPU-only; TPU is the compilation target).
 """
 
 from __future__ import annotations
@@ -56,7 +63,7 @@ def _rotate(cc, ar, ai, br, bi):
     return a2r, a2i, xr + yr, xi + yi
 
 
-def _column_body(coef_ref, c, state):
+def _column_body(coef_ref, parity_ref, c, state):
     """One mesh column on the de-interleaved planes."""
     er, ei, orr, oi = state
     cc = coef_ref[c]  # [8, P] dynamic-sliced from VMEM
@@ -75,47 +82,56 @@ def _column_body(coef_ref, c, state):
         noi = jnp.concatenate([a2i, oi[:, -1:]], axis=1)
         return ner, nei, nor, noi
 
-    return jax.lax.cond(c % 2 == 0, even, odd, None)
+    return jax.lax.cond(parity_ref[c, 0] == 0, even, odd, None)
 
 
-def _run_columns(coef_ref, state):
+def _run_columns(coef_ref, parity_ref, state):
     n_cols = coef_ref.shape[0]
     return jax.lax.fori_loop(
-        0, n_cols, functools.partial(_column_body, coef_ref), state)
+        0, n_cols,
+        functools.partial(_column_body, coef_ref, parity_ref), state)
 
 
 # ---------------------------------------------------------------------------
 # Kernel 1: single mesh
 # ---------------------------------------------------------------------------
 
-def mesh_kernel(coef_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
+def mesh_kernel(coef_ref, parity_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
                 oer_ref, oei_ref, oor_ref, ooi_ref):
     state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
-    er, ei, orr, oi = _run_columns(coef_ref, state)
+    er, ei, orr, oi = _run_columns(coef_ref, parity_ref, state)
     oer_ref[...] = er
     oei_ref[...] = ei
     oor_ref[...] = orr
     ooi_ref[...] = oi
 
 
-def mesh_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
-                     interpret: bool):
+def _coef_spec(n_cols: int, p: int):
+    return pl.BlockSpec((n_cols, 8, p), lambda i: (0, 0, 0))
+
+
+def _parity_spec(n_cols: int):
+    return pl.BlockSpec((n_cols, 1), lambda i: (0, 0))
+
+
+def mesh_pallas_call(n: int, n_cols: int, batch_block: int,
+                     n_batch_blocks: int, interpret: bool):
     p = n // 2
     plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
-    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
     out_shape = [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
                                       jnp.float32)] * 4
-    flops_per_block = 2 * (n * (n - 1) // 2) * batch_block * 16
+    flops_per_block = 2 * n_cols * p * batch_block * 16
     return pl.pallas_call(
         mesh_kernel,
         grid=(n_batch_blocks,),
-        in_specs=[coef, plane, plane, plane, plane],
+        in_specs=[_coef_spec(n_cols, p), _parity_spec(n_cols),
+                  plane, plane, plane, plane],
         out_specs=[plane] * 4,
         out_shape=out_shape,
         interpret=interpret,
         cost_estimate=pl.CostEstimate(
             flops=flops_per_block * n_batch_blocks,
-            bytes_accessed=(8 * batch_block * p * 4 + n * 8 * p * 4)
+            bytes_accessed=(8 * batch_block * p * 4 + n_cols * 8 * p * 4)
             * n_batch_blocks,
             transcendentals=0,
         ),
@@ -126,17 +142,18 @@ def mesh_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
 # Kernel 2: fused analog linear  (V-mesh -> diag -> U-mesh -> |detect|)
 # ---------------------------------------------------------------------------
 
-def _rfnn_forward(coef_v_ref, coef_u_ref, gains_ref, state):
+def _rfnn_forward(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref, gains_ref,
+                  state):
     """The fused layer body: V -> g1 -> U -> g2 -> |detect|.
 
     Returns detected magnitudes plus the two pre-gain stage boundaries
     (the VJP forward's residuals); the inference kernel discards them.
     """
-    v = _run_columns(coef_v_ref, state)
+    v = _run_columns(coef_v_ref, par_v_ref, state)
     g = gains_ref[...]  # [8, P]: g1 (even re/im, odd re/im), g2 (...)
     er, ei = _cmul(v[0], v[1], g[0], g[1])
     orr, oi = _cmul(v[2], v[3], g[2], g[3])
-    u = _run_columns(coef_u_ref, (er, ei, orr, oi))
+    u = _run_columns(coef_u_ref, par_u_ref, (er, ei, orr, oi))
     zer, zei = _cmul(u[0], u[1], g[4], g[5])
     zor, zoi = _cmul(u[2], u[3], g[6], g[7])
     oe = jnp.sqrt(zer * zer + zei * zei)   # |detect| on even channels
@@ -144,34 +161,39 @@ def _rfnn_forward(coef_v_ref, coef_u_ref, gains_ref, state):
     return oe, oo, v, u
 
 
-def rfnn_linear_kernel(coef_v_ref, coef_u_ref, gains_ref,
-                       xer_ref, xei_ref, xor_ref, xoi_ref,
+def rfnn_linear_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
+                       gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
                        oe_ref, oo_ref):
     state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
-    oe, oo, _, _ = _rfnn_forward(coef_v_ref, coef_u_ref, gains_ref, state)
+    oe, oo, _, _ = _rfnn_forward(coef_v_ref, par_v_ref, coef_u_ref,
+                                 par_u_ref, gains_ref, state)
     oe_ref[...] = oe
     oo_ref[...] = oo
 
 
-def rfnn_linear_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
+def rfnn_linear_pallas_call(n: int, n_cols_v: int, n_cols_u: int,
+                            batch_block: int, n_batch_blocks: int,
                             interpret: bool):
     p = n // 2
     plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
-    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
     gains = pl.BlockSpec((8, p), lambda i: (0, 0))
     out_shape = [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
                                       jnp.float32)] * 2
-    flops_per_block = 2 * (2 * (n * (n - 1) // 2) * 16 + 3 * n) * batch_block
+    flops_per_block = 2 * ((n_cols_v + n_cols_u) * p * 16 + 3 * n) \
+        * batch_block
     return pl.pallas_call(
         rfnn_linear_kernel,
         grid=(n_batch_blocks,),
-        in_specs=[coef, coef, gains, plane, plane, plane, plane],
+        in_specs=[_coef_spec(n_cols_v, p), _parity_spec(n_cols_v),
+                  _coef_spec(n_cols_u, p), _parity_spec(n_cols_u),
+                  gains, plane, plane, plane, plane],
         out_specs=[plane] * 2,
         out_shape=out_shape,
         interpret=interpret,
         cost_estimate=pl.CostEstimate(
             flops=flops_per_block * n_batch_blocks,
-            bytes_accessed=(6 * batch_block * p * 4 + 2 * n * 8 * p * 4
+            bytes_accessed=(6 * batch_block * p * 4
+                            + (n_cols_v + n_cols_u) * 8 * p * 4
                             + 8 * p * 4) * n_batch_blocks,
             transcendentals=batch_block * p * 2 * n_batch_blocks,
         ),
@@ -186,14 +208,40 @@ def adjoint_coefficients(coef: jax.Array) -> jax.Array:
     """Conjugate-transpose each packed 2x2 cell, column layout preserved.
 
     Rows (t00, t01, t10, t11) x (re, im) -> (t00*, t10*, t01*, t11*).  The
-    adjoint mesh applied in *reverse column order* is the exact inverse of
-    the forward mesh (each column is unitary), which is what lets the
-    backward kernel rebuild every intermediate state from the forward
-    output instead of storing it.
+    adjoint propagates the cotangent in the reversed sweep: the transpose
+    of the real-representation Jacobian of ``y = T x`` is ``T^H`` for any
+    complex ``T``.  For unitary columns it is also the exact inverse, which
+    is the PR-1 state-recompute trick as a special case.
     """
     idx = jnp.asarray([0, 1, 4, 5, 2, 3, 6, 7])
     sign = jnp.asarray([1.0, -1.0] * 4, coef.dtype)
     return coef[:, idx, :] * sign[None, :, None]
+
+
+def inverse_coefficients(coef: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Analytic per-cell 2x2 inverse in the packed coefficient layout.
+
+    ``inv(t) = adj(t) / det(t)`` with ``det = t00 t11 - t01 t10``.  This is
+    what lets the backward sweep rebuild intermediate states for
+    **non-unitary** cells (hybrid imbalance, per-cell insertion loss) with
+    no per-column residuals: ``s_c = T_c^{-1} s_{c+1}``.  Hardware cells
+    are well-conditioned (|det| ~ cell_gain^2); ``eps`` guards the
+    identity-padded slots' neighbourhood against exact zeros.
+    """
+    t00 = coef[:, 0] + 1j * coef[:, 1]
+    t01 = coef[:, 2] + 1j * coef[:, 3]
+    t10 = coef[:, 4] + 1j * coef[:, 5]
+    t11 = coef[:, 6] + 1j * coef[:, 7]
+    det = t00 * t11 - t01 * t10
+    inv_det = jnp.conj(det) / jnp.maximum(jnp.abs(det) ** 2, eps)
+    i00, i01 = t11 * inv_det, -t01 * inv_det
+    i10, i11 = -t10 * inv_det, t00 * inv_det
+    out = jnp.stack(
+        [jnp.real(i00), jnp.imag(i00), jnp.real(i01), jnp.imag(i01),
+         jnp.real(i10), jnp.imag(i10), jnp.real(i11), jnp.imag(i11)],
+        axis=1,
+    )
+    return out.astype(coef.dtype)
 
 
 def _conj_dot(xr, xi, gr, gi):
@@ -211,7 +259,7 @@ def _pair_grad_rows(ar, ai, br, bi, gar, gai, gbr, gbi):
     return jnp.concatenate([r0, r1, r2, r3, r4, r5, r6, r7], axis=0)  # [8, P]
 
 
-def _coef_grad(c, s_in, g_out):
+def _coef_grad(parity_ref, c, s_in, g_out):
     """Coefficient gradient of column ``c`` from its input state and the
     cotangent at its output, in the column's own pairing."""
     er, ei, orr, oi = s_in
@@ -227,27 +275,30 @@ def _coef_grad(c, s_in, g_out):
         # wrap slot of odd columns holds no cell
         return jnp.concatenate([rows, jnp.zeros((8, 1), rows.dtype)], axis=1)
 
-    return jax.lax.cond(c % 2 == 0, even, odd, None)
+    return jax.lax.cond(parity_ref[c, 0] == 0, even, odd, None)
 
 
-def _run_columns_bwd(coef_adj_ref, dcoef_ref, state, cot):
-    """Reversed column sweep: recompute states, accumulate phase gradients,
-    propagate the cotangent.  ``state`` starts at the mesh *output*."""
-    n_cols = coef_adj_ref.shape[0]
+def _run_columns_bwd(coef_inv_ref, coef_adj_ref, parity_ref, dcoef_ref,
+                     state, cot):
+    """Reversed column sweep: recompute states via the per-cell inverse,
+    accumulate coefficient gradients, propagate the cotangent via the
+    adjoint.  ``state`` starts at the mesh *output*."""
+    n_cols = coef_inv_ref.shape[0]
 
     def body(k, carry):
         c = n_cols - 1 - k
         s, g = carry[0:4], carry[4:8]
-        s_in = _column_body(coef_adj_ref, c, s)      # T_c^H s_{c+1} = s_c
-        dcoef_ref[c] = dcoef_ref[c] + _coef_grad(c, s_in, g)
-        g_in = _column_body(coef_adj_ref, c, g)      # T_c^H g_{c+1}
+        s_in = _column_body(coef_inv_ref, parity_ref, c, s)   # T_c^{-1} s_{c+1}
+        dcoef_ref[c] = dcoef_ref[c] + _coef_grad(parity_ref, c, s_in, g)
+        g_in = _column_body(coef_adj_ref, parity_ref, c, g)   # T_c^H g_{c+1}
         return (*s_in, *g_in)
 
     out = jax.lax.fori_loop(0, n_cols, body, (*state, *cot))
     return out[0:4], out[4:8]
 
 
-def mesh_bwd_kernel(coef_adj_ref, yer_ref, yei_ref, yor_ref, yoi_ref,
+def mesh_bwd_kernel(coef_inv_ref, coef_adj_ref, parity_ref,
+                    yer_ref, yei_ref, yor_ref, yoi_ref,
                     ger_ref, gei_ref, gor_ref, goi_ref,
                     dcoef_ref, dxer_ref, dxei_ref, dxor_ref, dxoi_ref):
     @pl.when(pl.program_id(0) == 0)
@@ -256,34 +307,35 @@ def mesh_bwd_kernel(coef_adj_ref, yer_ref, yei_ref, yor_ref, yoi_ref,
 
     y = (yer_ref[...], yei_ref[...], yor_ref[...], yoi_ref[...])
     g = (ger_ref[...], gei_ref[...], gor_ref[...], goi_ref[...])
-    _, gx = _run_columns_bwd(coef_adj_ref, dcoef_ref, y, g)
+    _, gx = _run_columns_bwd(coef_inv_ref, coef_adj_ref, parity_ref,
+                             dcoef_ref, y, g)
     dxer_ref[...] = gx[0]
     dxei_ref[...] = gx[1]
     dxor_ref[...] = gx[2]
     dxoi_ref[...] = gx[3]
 
 
-def mesh_bwd_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
-                         interpret: bool):
+def mesh_bwd_pallas_call(n: int, n_cols: int, batch_block: int,
+                         n_batch_blocks: int, interpret: bool):
     p = n // 2
     plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
-    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
     out_shape = (
-        [jax.ShapeDtypeStruct((n, 8, p), jnp.float32)]
+        [jax.ShapeDtypeStruct((n_cols, 8, p), jnp.float32)]
         + [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
                                 jnp.float32)] * 4)
     # state recompute + cotangent propagation + coefficient grads ~ 3x fwd
-    flops_per_block = 3 * 2 * (n * (n - 1) // 2) * batch_block * 16
+    flops_per_block = 3 * 2 * n_cols * p * batch_block * 16
     return pl.pallas_call(
         mesh_bwd_kernel,
         grid=(n_batch_blocks,),
-        in_specs=[coef] + [plane] * 8,
-        out_specs=[coef] + [plane] * 4,
+        in_specs=[_coef_spec(n_cols, p), _coef_spec(n_cols, p),
+                  _parity_spec(n_cols)] + [plane] * 8,
+        out_specs=[_coef_spec(n_cols, p)] + [plane] * 4,
         out_shape=out_shape,
         interpret=interpret,
         cost_estimate=pl.CostEstimate(
             flops=flops_per_block * n_batch_blocks,
-            bytes_accessed=(12 * batch_block * p * 4 + 2 * n * 8 * p * 4)
+            bytes_accessed=(12 * batch_block * p * 4 + 3 * n_cols * 8 * p * 4)
             * n_batch_blocks,
             transcendentals=0,
         ),
@@ -294,8 +346,8 @@ def mesh_bwd_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
 # Fused analog linear: forward-with-residuals and backward
 # ---------------------------------------------------------------------------
 
-def rfnn_linear_fwd_kernel(coef_v_ref, coef_u_ref, gains_ref,
-                           xer_ref, xei_ref, xor_ref, xoi_ref,
+def rfnn_linear_fwd_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
+                           gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
                            oe_ref, oo_ref,
                            ver_ref, vei_ref, vor_ref, voi_ref,
                            uer_ref, uei_ref, uor_ref, uoi_ref):
@@ -303,39 +355,45 @@ def rfnn_linear_fwd_kernel(coef_v_ref, coef_u_ref, gains_ref,
     body) but additionally writes the two stage boundaries (post-V and
     post-U, both pre-gain) — the only residuals the backward pass needs."""
     state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
-    oe, oo, v, u = _rfnn_forward(coef_v_ref, coef_u_ref, gains_ref, state)
+    oe, oo, v, u = _rfnn_forward(coef_v_ref, par_v_ref, coef_u_ref,
+                                 par_u_ref, gains_ref, state)
     oe_ref[...] = oe
     oo_ref[...] = oo
     ver_ref[...], vei_ref[...], vor_ref[...], voi_ref[...] = v
     uer_ref[...], uei_ref[...], uor_ref[...], uoi_ref[...] = u
 
 
-def rfnn_linear_fwd_pallas_call(n: int, batch_block: int, n_batch_blocks: int,
+def rfnn_linear_fwd_pallas_call(n: int, n_cols_v: int, n_cols_u: int,
+                                batch_block: int, n_batch_blocks: int,
                                 interpret: bool):
     p = n // 2
     plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
-    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
     gains = pl.BlockSpec((8, p), lambda i: (0, 0))
     out_shape = [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
                                       jnp.float32)] * 10
-    flops_per_block = 2 * (2 * (n * (n - 1) // 2) * 16 + 3 * n) * batch_block
+    flops_per_block = 2 * ((n_cols_v + n_cols_u) * p * 16 + 3 * n) \
+        * batch_block
     return pl.pallas_call(
         rfnn_linear_fwd_kernel,
         grid=(n_batch_blocks,),
-        in_specs=[coef, coef, gains, plane, plane, plane, plane],
+        in_specs=[_coef_spec(n_cols_v, p), _parity_spec(n_cols_v),
+                  _coef_spec(n_cols_u, p), _parity_spec(n_cols_u),
+                  gains, plane, plane, plane, plane],
         out_specs=[plane] * 10,
         out_shape=out_shape,
         interpret=interpret,
         cost_estimate=pl.CostEstimate(
             flops=flops_per_block * n_batch_blocks,
-            bytes_accessed=(14 * batch_block * p * 4 + 2 * n * 8 * p * 4
+            bytes_accessed=(14 * batch_block * p * 4
+                            + (n_cols_v + n_cols_u) * 8 * p * 4
                             + 8 * p * 4) * n_batch_blocks,
             transcendentals=batch_block * p * 2 * n_batch_blocks,
         ),
     )
 
 
-def rfnn_linear_bwd_kernel(coef_v_adj_ref, coef_u_adj_ref, gains_ref,
+def rfnn_linear_bwd_kernel(cv_inv_ref, cv_adj_ref, par_v_ref,
+                           cu_inv_ref, cu_adj_ref, par_u_ref, gains_ref,
                            ver_ref, vei_ref, vor_ref, voi_ref,
                            uer_ref, uei_ref, uor_ref, uoi_ref,
                            goe_ref, goo_ref,
@@ -344,7 +402,7 @@ def rfnn_linear_bwd_kernel(coef_v_adj_ref, coef_u_adj_ref, gains_ref,
     """Unwind |detect| -> g2 -> U-mesh -> g1 -> V-mesh in one VMEM residency.
 
     Saved residuals are only the two stage boundaries; everything inside a
-    mesh is recomputed by the reversed adjoint column sweep.
+    mesh is recomputed by the reversed inverse/adjoint column sweep.
     """
     @pl.when(pl.program_id(0) == 0)
     def _init():
@@ -374,8 +432,8 @@ def rfnn_linear_bwd_kernel(coef_v_adj_ref, coef_u_adj_ref, gains_ref,
     guer, guei = _cmul(g[4], -g[5], gzer, gzei)
     guor, guoi = _cmul(g[6], -g[7], gzor, gzoi)
 
-    # U mesh: reversed adjoint sweep from the saved post-U boundary
-    _, gh = _run_columns_bwd(coef_u_adj_ref, dcu_ref, u,
+    # U mesh: reversed inverse/adjoint sweep from the saved post-U boundary
+    _, gh = _run_columns_bwd(cu_inv_ref, cu_adj_ref, par_u_ref, dcu_ref, u,
                              (guer, guei, guor, guoi))
 
     # mid gain g1: gradient rows 0..3 and cotangent of the V output
@@ -386,8 +444,8 @@ def rfnn_linear_bwd_kernel(coef_v_adj_ref, coef_u_adj_ref, gains_ref,
 
     dg_ref[...] = dg_ref[...] + jnp.concatenate(list(dg1) + list(dg2), axis=0)
 
-    # V mesh: reversed adjoint sweep from the saved post-V boundary
-    _, gx = _run_columns_bwd(coef_v_adj_ref, dcv_ref, v,
+    # V mesh: reversed inverse/adjoint sweep from the saved post-V boundary
+    _, gx = _run_columns_bwd(cv_inv_ref, cv_adj_ref, par_v_ref, dcv_ref, v,
                              (gver, gvei, gvor, gvoi))
     dxer_ref[...] = gx[0]
     dxei_ref[...] = gx[1]
@@ -395,29 +453,35 @@ def rfnn_linear_bwd_kernel(coef_v_adj_ref, coef_u_adj_ref, gains_ref,
     dxoi_ref[...] = gx[3]
 
 
-def rfnn_linear_bwd_pallas_call(n: int, batch_block: int,
-                                n_batch_blocks: int, interpret: bool):
+def rfnn_linear_bwd_pallas_call(n: int, n_cols_v: int, n_cols_u: int,
+                                batch_block: int, n_batch_blocks: int,
+                                interpret: bool):
     p = n // 2
     plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
-    coef = pl.BlockSpec((n, 8, p), lambda i: (0, 0, 0))
     gains = pl.BlockSpec((8, p), lambda i: (0, 0))
     out_shape = (
-        [jax.ShapeDtypeStruct((n, 8, p), jnp.float32)] * 2
-        + [jax.ShapeDtypeStruct((8, p), jnp.float32)]
+        [jax.ShapeDtypeStruct((n_cols_v, 8, p), jnp.float32),
+         jax.ShapeDtypeStruct((n_cols_u, 8, p), jnp.float32),
+         jax.ShapeDtypeStruct((8, p), jnp.float32)]
         + [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
                                 jnp.float32)] * 4)
-    flops_per_block = 3 * 2 * (2 * (n * (n - 1) // 2) * 16 + 6 * n) \
+    flops_per_block = 3 * 2 * ((n_cols_v + n_cols_u) * p * 16 + 6 * n) \
         * batch_block
     return pl.pallas_call(
         rfnn_linear_bwd_kernel,
         grid=(n_batch_blocks,),
-        in_specs=[coef, coef, gains] + [plane] * 10,
-        out_specs=[coef, coef, gains] + [plane] * 4,
+        in_specs=[_coef_spec(n_cols_v, p), _coef_spec(n_cols_v, p),
+                  _parity_spec(n_cols_v),
+                  _coef_spec(n_cols_u, p), _coef_spec(n_cols_u, p),
+                  _parity_spec(n_cols_u), gains] + [plane] * 10,
+        out_specs=[_coef_spec(n_cols_v, p), _coef_spec(n_cols_u, p), gains]
+        + [plane] * 4,
         out_shape=out_shape,
         interpret=interpret,
         cost_estimate=pl.CostEstimate(
             flops=flops_per_block * n_batch_blocks,
-            bytes_accessed=(14 * batch_block * p * 4 + 4 * n * 8 * p * 4
+            bytes_accessed=(14 * batch_block * p * 4
+                            + 3 * (n_cols_v + n_cols_u) * 8 * p * 4
                             + 2 * 8 * p * 4) * n_batch_blocks,
             transcendentals=batch_block * p * 2 * n_batch_blocks,
         ),

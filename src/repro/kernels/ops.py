@@ -5,12 +5,19 @@ CPU container (kernel body executed op-by-op) and compile to Mosaic on TPU.
 
 Both ``mesh_apply`` and ``rfnn_linear`` carry custom VJPs: the backward
 pass is itself a fused Pallas kernel that re-runs the mesh columns in
-reverse with conjugate-transposed coefficients (unitarity trick — see
-DESIGN.md), so training keeps the same VMEM-resident hot loop as
-inference.  Everything outside the pallas_call boundary (coefficient
-packing from theta/phi, channel split/merge, phase screens, gains) is
+reverse, rebuilding states with the per-cell analytic 2x2 **inverse** and
+propagating the cotangent with the **adjoint** (see DESIGN.md) — so
+training keeps the same VMEM-resident hot loop as inference for ideal
+*and* hardware-imperfect cells, on Clements *and* Reck layouts.  There is
+no reference fallback: ``backend="pallas"`` means the kernel path, always.
+
+Everything outside the pallas_call boundary — coefficient packing from
+theta/phi (ideal or via the hardware model, including ``key``-driven
+phase-noise sampling), channel split/merge, phase screens, gains — is
 ordinary JAX and differentiates natively, which is how gradients reach
-the mesh phases, attenuations and the digital scale.
+the mesh phases, attenuations and the digital scale.  Detector noise and
+the sensitivity floor also stay outside (``hardware.detect_magnitude``
+composes on the returned magnitudes).
 """
 
 from __future__ import annotations
@@ -20,9 +27,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import hardware as hw_lib
+from repro.core import mesh as mesh_lib
+from repro.core.cell import cell_matrix
 from repro.kernels import givens_mesh, ref
+from repro.kernels.schedule import (
+    MeshSchedule,
+    clements_schedule,
+    pack_cells,
+    parity_array,
+    schedule_from_plan,
+)
 
 Array = jax.Array
+
+#: Instrumentation: per-entry-point invocation counts of the kernel path.
+#: Tests use this to assert the Pallas path is actually taken (there is no
+#: silent reference fallback left to fall into).  Counts tick on every
+#: public-wrapper call (trace time under an outer jit).
+KERNEL_PATH_CALLS = {"mesh_apply": 0, "rfnn_linear": 0, "mesh_apply_cells": 0}
 
 
 def _default_interpret() -> bool:
@@ -48,49 +71,67 @@ def _pad_batch(x2d: Array, block: int) -> tuple[Array, int]:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def _mesh_planes(n, block_b, nb, interpret, coef, xer, xei, xor, xoi):
-    call = givens_mesh.mesh_pallas_call(n, block_b, nb, interpret)
-    return tuple(call(coef, xer, xei, xor, xoi))
+def _mesh_planes(sched, block_b, nb, interpret, coef, xer, xei, xor, xoi):
+    call = givens_mesh.mesh_pallas_call(
+        sched.n, sched.n_columns, block_b, nb, interpret)
+    return tuple(call(coef, parity_array(sched), xer, xei, xor, xoi))
 
 
-def _mesh_planes_fwd(n, block_b, nb, interpret, coef, xer, xei, xor, xoi):
-    outs = _mesh_planes(n, block_b, nb, interpret, coef, xer, xei, xor, xoi)
-    # unitarity: the output planes are the only state residual needed
+def _mesh_planes_fwd(sched, block_b, nb, interpret, coef, xer, xei, xor, xoi):
+    outs = _mesh_planes(sched, block_b, nb, interpret, coef,
+                        xer, xei, xor, xoi)
+    # the output planes are the only state residual needed: the backward
+    # sweep rebuilds every intermediate via the per-cell inverse
     return outs, (coef, outs)
 
 
-def _mesh_planes_bwd(n, block_b, nb, interpret, res, cot):
+def _mesh_planes_bwd(sched, block_b, nb, interpret, res, cot):
     coef, outs = res
+    coef_inv = givens_mesh.inverse_coefficients(coef)
     coef_adj = givens_mesh.adjoint_coefficients(coef)
-    call = givens_mesh.mesh_bwd_pallas_call(n, block_b, nb, interpret)
-    dcoef, dxer, dxei, dxor, dxoi = call(coef_adj, *outs, *cot)
+    call = givens_mesh.mesh_bwd_pallas_call(
+        sched.n, sched.n_columns, block_b, nb, interpret)
+    dcoef, dxer, dxei, dxor, dxoi = call(
+        coef_inv, coef_adj, parity_array(sched), *outs, *cot)
     return dcoef, dxer, dxei, dxor, dxoi
 
 
 _mesh_planes.defvjp(_mesh_planes_fwd, _mesh_planes_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def _rfnn_planes(n, block_b, nb, interpret, coef_v, coef_u, gains,
-                 xer, xei, xor, xoi):
-    call = givens_mesh.rfnn_linear_pallas_call(n, block_b, nb, interpret)
-    return tuple(call(coef_v, coef_u, gains, xer, xei, xor, xoi))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _rfnn_planes(sched_v, sched_u, block_b, nb, interpret, coef_v, coef_u,
+                 gains, xer, xei, xor, xoi):
+    call = givens_mesh.rfnn_linear_pallas_call(
+        sched_v.n, sched_v.n_columns, sched_u.n_columns, block_b, nb,
+        interpret)
+    return tuple(call(coef_v, parity_array(sched_v),
+                      coef_u, parity_array(sched_u), gains,
+                      xer, xei, xor, xoi))
 
 
-def _rfnn_planes_fwd(n, block_b, nb, interpret, coef_v, coef_u, gains,
-                     xer, xei, xor, xoi):
-    call = givens_mesh.rfnn_linear_fwd_pallas_call(n, block_b, nb, interpret)
-    oe, oo, *stage = call(coef_v, coef_u, gains, xer, xei, xor, xoi)
+def _rfnn_planes_fwd(sched_v, sched_u, block_b, nb, interpret, coef_v,
+                     coef_u, gains, xer, xei, xor, xoi):
+    call = givens_mesh.rfnn_linear_fwd_pallas_call(
+        sched_v.n, sched_v.n_columns, sched_u.n_columns, block_b, nb,
+        interpret)
+    oe, oo, *stage = call(coef_v, parity_array(sched_v),
+                          coef_u, parity_array(sched_u), gains,
+                          xer, xei, xor, xoi)
     return (oe, oo), (coef_v, coef_u, gains, tuple(stage))
 
 
-def _rfnn_planes_bwd(n, block_b, nb, interpret, res, cot):
+def _rfnn_planes_bwd(sched_v, sched_u, block_b, nb, interpret, res, cot):
     coef_v, coef_u, gains, stage = res
-    cva = givens_mesh.adjoint_coefficients(coef_v)
-    cua = givens_mesh.adjoint_coefficients(coef_u)
-    call = givens_mesh.rfnn_linear_bwd_pallas_call(n, block_b, nb, interpret)
+    call = givens_mesh.rfnn_linear_bwd_pallas_call(
+        sched_v.n, sched_v.n_columns, sched_u.n_columns, block_b, nb,
+        interpret)
     dcv, dcu, dgains, dxer, dxei, dxor, dxoi = call(
-        cva, cua, gains, *stage, *cot)
+        givens_mesh.inverse_coefficients(coef_v),
+        givens_mesh.adjoint_coefficients(coef_v), parity_array(sched_v),
+        givens_mesh.inverse_coefficients(coef_u),
+        givens_mesh.adjoint_coefficients(coef_u), parity_array(sched_u),
+        gains, *stage, *cot)
     return dcv, dcu, dgains, dxer, dxei, dxor, dxoi
 
 
@@ -98,62 +139,121 @@ _rfnn_planes.defvjp(_rfnn_planes_fwd, _rfnn_planes_bwd)
 
 
 # ---------------------------------------------------------------------------
+# coefficient construction (ideal cells or the hardware model)
+# ---------------------------------------------------------------------------
+
+def _mesh_coefficients(sched: MeshSchedule, params: dict,
+                       hardware: hw_lib.HardwareModel | None,
+                       key: Array | None) -> Array:
+    """Packed [C', 8, P] coefficients from mesh params.
+
+    With a hardware model, cells come from ``imperfect_cell_matrix`` —
+    the same function (and the same ``key`` consumption) as the reference
+    ``apply_mesh_hw`` path, so the two backends see identical draws.
+    """
+    theta, phi = params["theta"], params["phi"]
+    if hardware is None:
+        t_all = cell_matrix(theta, phi)
+    else:
+        t_all = hw_lib.imperfect_cell_matrix(theta, phi, hardware, key)
+    return pack_cells(sched, t_all)
+
+
+def _run_mesh_planes(sched, x2, coef, block_b, interpret):
+    bb = _auto_block(x2.shape[0], block_b)
+    x2, b_orig = _pad_batch(x2, bb)
+    nb = x2.shape[0] // bb
+    planes = ref.split_channels(x2)
+    planes = _mesh_planes(sched, bb, nb, interpret, coef, *planes)
+    return ref.merge_channels(*planes)[:b_orig]
+
+
+# ---------------------------------------------------------------------------
 # Public wrappers
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n", "block_b", "interpret"))
-def mesh_apply(params: dict, x: Array, *, n: int, block_b: int = 128,
-               interpret: bool | None = None) -> Array:
-    """Apply a Clements-layout mesh to ``x[..., n]`` via the Pallas kernel.
+@functools.partial(jax.jit,
+                   static_argnums=(0, 1, 2, 3))
+def _mesh_apply_impl(sched, hardware, block_b, interpret, params, x, key):
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape((-1, sched.n)).astype(jnp.complex64)
+    alpha_in = params.get("alpha_in")
+    if alpha_in is not None:
+        x2 = x2 * jnp.exp(-1j * alpha_in.astype(jnp.complex64))
+    coef = _mesh_coefficients(sched, params, hardware, key)
+    y = _run_mesh_planes(sched, x2, coef, block_b, interpret)
+    alpha = params.get("alpha")
+    if alpha is not None:
+        y = y * jnp.exp(-1j * alpha.astype(jnp.complex64))
+    return y.reshape(batch_shape + (sched.n,))
 
-    Semantics match ``repro.core.mesh.apply_mesh`` on a clements plan
-    (including the optional phase screens ``alpha_in`` / ``alpha``).
+
+def mesh_apply(params: dict, x: Array, *, n: int,
+               plan: mesh_lib.MeshPlan | None = None,
+               hardware: hw_lib.HardwareModel | None = None,
+               key: Array | None = None, block_b: int = 128,
+               interpret: bool | None = None) -> Array:
+    """Apply a mesh to ``x[..., n]`` via the Pallas kernel.
+
+    Semantics match ``repro.core.mesh.apply_mesh`` on the given plan
+    (``None`` = the Clements rectangle), including the optional phase
+    screens ``alpha_in`` / ``alpha``; with ``hardware`` they match
+    ``repro.core.hardware.apply_mesh_hw`` (imperfect hybrids, per-cell
+    insertion loss, and ``key``-sampled phase-shifter noise).
     Differentiable w.r.t. ``params`` and ``x`` through the kernel VJP.
     """
     if interpret is None:
         interpret = _default_interpret()
+    sched = clements_schedule(n) if plan is None else schedule_from_plan(plan)
+    KERNEL_PATH_CALLS["mesh_apply"] += 1
+    return _mesh_apply_impl(sched, hardware, block_b, interpret,
+                            params, x, key)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _mesh_apply_cells_impl(sched, block_b, interpret, t_all, x, alpha_in,
+                           alpha):
     batch_shape = x.shape[:-1]
-    x2 = x.reshape((-1, n)).astype(jnp.complex64)
-    alpha_in = params.get("alpha_in")
+    x2 = x.reshape((-1, sched.n)).astype(jnp.complex64)
     if alpha_in is not None:
         x2 = x2 * jnp.exp(-1j * alpha_in.astype(jnp.complex64))
-    bb = _auto_block(x2.shape[0], block_b)
-    x2, b_orig = _pad_batch(x2, bb)
-    nb = x2.shape[0] // bb
-
-    coef = ref.clements_coefficients(params["theta"], params["phi"], n)
-    planes = ref.split_channels(x2)
-    planes = _mesh_planes(n, bb, nb, interpret, coef, *planes)
-    y = ref.merge_channels(*planes)[:b_orig]
-    alpha = params.get("alpha")
+    coef = pack_cells(sched, t_all)
+    y = _run_mesh_planes(sched, x2, coef, block_b, interpret)
     if alpha is not None:
         y = y * jnp.exp(-1j * alpha.astype(jnp.complex64))
-    return y.reshape(batch_shape + (n,))
+    return y.reshape(batch_shape + (sched.n,))
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_b", "interpret"))
-def rfnn_linear(v_params: dict, atten: Array, u_params: dict, x: Array, *,
-                n: int, scale: Array | float = 1.0, block_b: int = 128,
-                interpret: bool | None = None) -> Array:
-    """Fused analog linear layer |scale * U(D(V x))| via the Pallas kernel.
+def mesh_apply_cells(t_all: Array, x: Array, *, plan: mesh_lib.MeshPlan,
+                     alpha_in: Array | None = None,
+                     alpha: Array | None = None, block_b: int = 128,
+                     interpret: bool | None = None) -> Array:
+    """Kernel mesh apply from explicit per-cell 2x2 matrices ``[C, P, 2, 2]``.
 
-    ``atten``: [n] real attenuation (paper's diagonal D / sigma_max);
-    ``scale``: the digital gamma.  Output is the detected magnitude [.., n].
-    Differentiable w.r.t. both mesh params, ``atten``, ``scale`` and ``x``
-    through the fused kernel VJP.
+    The cells-level entry point: callers that build transfer matrices
+    directly — e.g. Monte-Carlo yield sweeps vmapping over sampled
+    ``HardwareModel`` draws — hit the same fused sweep without going
+    through (theta, phi).  ``vmap``-compatible over ``t_all`` and ``x``.
     """
     if interpret is None:
         interpret = _default_interpret()
+    sched = schedule_from_plan(plan)
+    KERNEL_PATH_CALLS["mesh_apply_cells"] += 1
+    return _mesh_apply_cells_impl(sched, block_b, interpret, t_all, x,
+                                  alpha_in, alpha)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _rfnn_linear_impl(sched_v, sched_u, hardware, block_b, interpret,
+                      v_params, atten, u_params, x, scale, key_v, key_u):
+    n = sched_v.n
     batch_shape = x.shape[:-1]
     x2 = x.reshape((-1, n)).astype(jnp.complex64)
     if v_params.get("alpha_in") is not None:
         x2 = x2 * jnp.exp(-1j * v_params["alpha_in"].astype(jnp.complex64))
-    bb = _auto_block(x2.shape[0], block_b)
-    x2, b_orig = _pad_batch(x2, bb)
-    nb = x2.shape[0] // bb
 
-    coef_v = ref.clements_coefficients(v_params["theta"], v_params["phi"], n)
-    coef_u = ref.clements_coefficients(u_params["theta"], u_params["phi"], n)
+    coef_v = _mesh_coefficients(sched_v, v_params, hardware, key_v)
+    coef_u = _mesh_coefficients(sched_u, u_params, hardware, key_u)
 
     # fold V's output screen (and U's input screen) into the mid-gain and
     # U's output screen into the post-gain — all diagonal, so they commute
@@ -172,8 +272,43 @@ def rfnn_linear(v_params: dict, atten: Array, u_params: dict, x: Array, *,
         jnp.real(g2[1::2]), jnp.imag(g2[1::2]),
     ]).astype(jnp.float32)
 
+    bb = _auto_block(x2.shape[0], block_b)
+    x2, b_orig = _pad_batch(x2, bb)
+    nb = x2.shape[0] // bb
     planes = ref.split_channels(x2)
-    oe, oo = _rfnn_planes(n, bb, nb, interpret, coef_v, coef_u, gains,
-                          *planes)
+    oe, oo = _rfnn_planes(sched_v, sched_u, bb, nb, interpret,
+                          coef_v, coef_u, gains, *planes)
     out = jnp.stack([oe, oo], axis=-1).reshape((-1, n))[:b_orig]
     return out.reshape(batch_shape + (n,))
+
+
+def rfnn_linear(v_params: dict, atten: Array, u_params: dict, x: Array, *,
+                n: int, scale: Array | float = 1.0,
+                v_plan: mesh_lib.MeshPlan | None = None,
+                u_plan: mesh_lib.MeshPlan | None = None,
+                hardware: hw_lib.HardwareModel | None = None,
+                key_v: Array | None = None, key_u: Array | None = None,
+                block_b: int = 128,
+                interpret: bool | None = None) -> Array:
+    """Fused analog linear layer |scale * U(D(V x))| via the Pallas kernel.
+
+    ``atten``: [n] attenuation (paper's diagonal D / sigma_max);
+    ``scale``: the digital gamma.  Output is the detected magnitude [.., n]
+    (apply ``hardware.detect_magnitude`` on top for the detector's noise
+    and sensitivity floor).  ``v_plan``/``u_plan`` default to the Clements
+    rectangle; analytic Reck programs run in the same fused sweep.  With
+    ``hardware``, cell coefficients come from the imperfection model, with
+    phase noise drawn from ``key_v``/``key_u`` exactly like the reference
+    path.  Differentiable w.r.t. both mesh params, ``atten``, ``scale``
+    and ``x`` through the fused kernel VJP.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    sched_v = (clements_schedule(n) if v_plan is None
+               else schedule_from_plan(v_plan))
+    sched_u = (clements_schedule(n) if u_plan is None
+               else schedule_from_plan(u_plan))
+    KERNEL_PATH_CALLS["rfnn_linear"] += 1
+    return _rfnn_linear_impl(sched_v, sched_u, hardware, block_b, interpret,
+                             v_params, atten, u_params, x,
+                             jnp.asarray(scale, jnp.float32), key_v, key_u)

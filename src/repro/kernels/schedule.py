@@ -1,0 +1,154 @@
+"""Static kernel schedules for arbitrary adjacent-pair mesh layouts.
+
+The Pallas mesh kernels operate on de-interleaved even/odd channel planes,
+so a kernel column can only pair channels in one of two ways:
+
+  * parity 0 — ``(2i, 2i+1)``: pair slot ``i`` rotates ``(even_i, odd_i)``;
+  * parity 1 — ``(2i+1, 2i+2)``: slot ``i`` rotates ``(odd_i, even_{i+1})``
+    (the wrap slot ``P-1`` never holds a cell).
+
+A :class:`repro.core.mesh.MeshPlan` column, however, may mix both parities
+(``pack_cells_to_columns`` packs greedily — e.g. Reck programs from the
+analytic synthesizer).  :func:`schedule_from_plan` re-schedules any plan
+into parity-homogeneous kernel columns: each plan column splits into at
+most one parity-0 and one parity-1 sub-column (exact, because cells within
+a plan column never overlap and cells of different parity in the same
+column therefore commute).  The rectangular Clements layout maps 1:1 —
+its columns are already parity-pure and alternate 0/1 — so the ideal path
+is the degenerate case and pays nothing for the generality.
+
+The resulting :class:`MeshSchedule` is a hashable, purely static object
+(tuples of ints), usable as a jit/static and ``custom_vjp`` nondiff
+argument; :func:`pack_cells` is the differentiable bridge that gathers
+per-cell 2x2 transfer matrices (ideal *or* hardware-imperfect) into the
+kernels' ``[C', 8, P]`` coefficient layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mesh as mesh_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSchedule:
+    """Parity-homogeneous column schedule of an adjacent-pair mesh.
+
+    Attributes:
+      n: number of channels (even).
+      parity: per kernel column, 0 (pairs ``(2i, 2i+1)``) or 1
+        (pairs ``(2i+1, 2i+2)``).
+      source: per kernel column, ``n//2`` entries mapping each kernel pair
+        slot to a flat plan-cell index ``col * P + slot`` (or -1 for an
+        identity slot).
+    """
+
+    n: int
+    parity: tuple[int, ...]
+    source: tuple[tuple[int, ...], ...]
+
+    @property
+    def n_columns(self) -> int:
+        return len(self.parity)
+
+    @property
+    def pairs(self) -> int:
+        return self.n // 2
+
+
+# Bounded: dynamically synthesized Reck programs mint a fresh plan per
+# reprogramming, and each distinct schedule is also a distinct jit static —
+# evicting oldest keeps a long-lived sweep over many target matrices from
+# accumulating schedules without bound.
+_SCHEDULE_CACHE: dict[tuple, MeshSchedule] = {}
+_SCHEDULE_CACHE_MAX = 128
+
+
+def schedule_from_plan(plan: mesh_lib.MeshPlan) -> MeshSchedule:
+    """Re-schedule an arbitrary MeshPlan into kernel parity columns."""
+    key = (plan.n, plan.top.tobytes(), plan.active.tobytes())
+    hit = _SCHEDULE_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    pk = plan.n // 2
+    parity: list[int] = []
+    source: list[tuple[int, ...]] = []
+    for c in range(plan.n_columns):
+        for par in (0, 1):
+            row = [-1] * pk
+            found = False
+            for s in range(plan.pairs_per_column):
+                if not plan.active[c, s]:
+                    continue
+                p = int(plan.top[c, s])
+                if p % 2 != par:
+                    continue
+                row[p // 2] = c * plan.pairs_per_column + s
+                found = True
+            if found:
+                parity.append(par)
+                source.append(tuple(row))
+    if not parity:  # cell-free mesh: one identity column keeps shapes valid
+        parity = [0]
+        source = [tuple([-1] * pk)]
+    sched = MeshSchedule(n=plan.n, parity=tuple(parity), source=tuple(source))
+    while len(_SCHEDULE_CACHE) >= _SCHEDULE_CACHE_MAX:
+        _SCHEDULE_CACHE.pop(next(iter(_SCHEDULE_CACHE)))
+    _SCHEDULE_CACHE[key] = sched
+    return sched
+
+
+def clements_schedule(n: int) -> MeshSchedule:
+    """The rectangular Clements schedule (1:1 with its plan columns)."""
+    return schedule_from_plan(mesh_lib.clements_plan(n))
+
+
+def parity_array(sched: MeshSchedule) -> Array:
+    """The per-column parity as the kernels' ``[C', 1]`` int32 input."""
+    return jnp.asarray(sched.parity, jnp.int32).reshape(-1, 1)
+
+
+def pack_cells(sched: MeshSchedule, t_all: Array) -> Array:
+    """Gather per-cell 2x2 matrices into kernel coefficients ``[C', 8, P]``.
+
+    ``t_all``: complex ``[..., C, P, 2, 2]`` cell transfer matrices in plan
+    layout (ideal :func:`repro.core.cell.cell_matrix` or the hardware
+    model's :func:`repro.core.hardware.imperfect_cell_matrix`).  Inactive
+    plan slots are never referenced by the schedule, so parked parameters
+    cannot leak in; identity fills the unused kernel slots.  Differentiable
+    (a gather), and batch dims vmap through.
+    """
+    c, p = t_all.shape[-4], t_all.shape[-3]
+    if p != sched.pairs:
+        raise ValueError(
+            f"cell tensor has {p} pair slots per column, schedule expects "
+            f"{sched.pairs} (n={sched.n})")
+    max_src = max((s for row in sched.source for s in row), default=-1)
+    if max_src >= c * p:
+        raise ValueError(
+            f"schedule references cell {max_src} but tensor holds only "
+            f"{c * p} — t_all built from a different plan?")
+    lead = t_all.shape[:-4]
+    flat = t_all.reshape(lead + (c * p, 2, 2)).astype(jnp.complex64)
+    eye = jnp.broadcast_to(jnp.eye(2, dtype=jnp.complex64),
+                           lead + (1, 2, 2))
+    flat = jnp.concatenate([flat, eye], axis=-3)
+    idx = np.asarray(sched.source, np.int64)
+    idx = np.where(idx < 0, c * p, idx)  # -1 -> the appended identity
+    cells = jnp.take(flat, jnp.asarray(idx), axis=-3)  # [..., C', P, 2, 2]
+    coef = jnp.stack(
+        [jnp.real(cells[..., 0, 0]), jnp.imag(cells[..., 0, 0]),
+         jnp.real(cells[..., 0, 1]), jnp.imag(cells[..., 0, 1]),
+         jnp.real(cells[..., 1, 0]), jnp.imag(cells[..., 1, 0]),
+         jnp.real(cells[..., 1, 1]), jnp.imag(cells[..., 1, 1])],
+        axis=-2,
+    )  # [..., C', 8, P]
+    return coef.astype(jnp.float32)

@@ -38,8 +38,11 @@ class MnistRFNN:
     quantize: str | None = "table1"
     d_hidden: int = 8
     n_classes: int = 10
-    #: "pallas" runs the 8x8 mesh (fwd + bwd) through the fused kernels;
-    #: requires hardware=None (the imperfection model is reference-only).
+    #: "pallas" runs the 8x8 mesh (fwd + bwd) through the fused kernels,
+    #: with or without the hardware-imperfection model: non-ideal cell
+    #: coefficients ride in the same VMEM-resident sweep, so the paper's
+    #: hardware-in-the-loop training (and its DSPSA refinement bursts) is
+    #: a kernel workload end-to-end.
     backend: str = "reference"
 
     def __post_init__(self):

@@ -33,17 +33,12 @@ class RFNN2x2:
 
     hardware: HardwareModel = PROTOTYPE
     gamma: float = GAMMA
-    #: "pallas" evaluates the cell as a 2-channel mesh via the fused kernel.
-    #: The kernel models the ideal cell, so it engages only when the
-    #: hardware model's hybrids/loss are ideal (phase-shifter noise and the
-    #: detector chain are modeled on both paths); a non-ideal model keeps
-    #: the reference path — same fallback contract as the analog layers.
+    #: "pallas" evaluates the cell as a 2-channel mesh via the fused kernel,
+    #: for *any* hardware model: the generalized kernel carries the lossy,
+    #: imbalanced cell coefficients directly, and phase-shifter noise plus
+    #: the detector chain are sampled identically on both paths (same key
+    #: consumption), so backends agree draw-for-draw.
     backend: str = "reference"
-
-    def _kernel_exact(self) -> bool:
-        hw = self.hardware
-        return (hw.hybrid_imbalance == 0.0 and hw.hybrid_phase_err == 0.0
-                and hw.cell_loss_db == 0.0)
 
     def device_output(self, theta_code, phi_code, x, key=None):
         """Measured |V| at (P2, P3) for inputs x [N, 2] (volts, unscaled)."""
@@ -54,7 +49,10 @@ class RFNN2x2:
         vin = jnp.stack([x[:, 1], x[:, 0]], axis=-1).astype(jnp.complex64)
         vin = vin * self.gamma
         kdet = key if key is None else jax.random.fold_in(key, 1)
-        if self.backend == "pallas" and self._kernel_exact():
+        if self.backend == "pallas":
+            # sample phase noise on the scalar codes first (the exact key
+            # consumption of imperfect_cell_matrix on the reference path),
+            # then hand the noisy phases to the kernel's hardware packing
             if key is not None and self.hardware.phase_sigma > 0:
                 k1, k2 = jax.random.split(key)
                 theta = theta + self.hardware.phase_sigma * \
@@ -67,7 +65,8 @@ class RFNN2x2:
                 "theta": jnp.stack([jnp.reshape(theta, (1,)), jnp.zeros((1,))]),
                 "phi": jnp.stack([jnp.reshape(phi, (1,)), jnp.zeros((1,))]),
             }
-            vout = kernel_ops.mesh_apply(params, vin, n=2, block_b=8)
+            vout = kernel_ops.mesh_apply(params, vin, n=2, block_b=8,
+                                         hardware=self.hardware, key=None)
             mag = detect_magnitude(vout, self.hardware, kdet)
             return mag / self.gamma
         t = imperfect_cell_matrix(theta, phi, self.hardware, key)
@@ -123,14 +122,17 @@ def accuracy(net, params, theta_code, phi_code, x, y):
 
 
 def train_rfnn2x2(x, y, *, method: str = "search", hardware=PROTOTYPE,
-                  steps=300, seed=0):
+                  steps=300, seed=0, backend: str = "reference"):
     """Full Algorithm-I style training.  Returns (net, params, codes, info).
 
     method 'search': exhaustive over the 6 theta states (phi fixed at L6 as
     in Fig. 9); 'dspsa': discrete optimization over (theta, phi) codes with
     SGD-trained post-processing per evaluation (two-measurement DSPSA).
+    With ``backend="pallas"`` every device measurement pass — including
+    both loss evaluations of each DSPSA step — runs through the fused
+    kernel, the in-situ-training workload of the paper's Algorithm I.
     """
-    net = RFNN2x2(hardware=hardware)
+    net = RFNN2x2(hardware=hardware, backend=backend)
     if method == "search":
         best = None
         for tc in range(6):

@@ -203,6 +203,26 @@ def test_dspsa_converges_on_quadratic():
     assert min(hist) <= 2.0  # near-exact recovery
 
 
+def test_dspsa_two_measurement_budget():
+    """measure_projection=False is the paper-strict Algorithm-I budget:
+    exactly two loss evaluations (device passes) per step."""
+    target = jnp.array([1, 4, 2, 0, 5, 3])
+    calls = []
+
+    def loss(codes):
+        calls.append(1)
+        return jnp.sum((codes["c"].astype(jnp.float32) - target) ** 2)
+
+    steps = 50
+    best, hist = dspsa.minimize(
+        jax.random.PRNGKey(0), {"c": jnp.zeros(6, jnp.int32)}, loss,
+        dspsa.DSPSAConfig(a=2.0), steps=steps, measure_projection=False)
+    assert len(calls) == 2 * steps
+    assert len(hist) == steps
+    assert min(hist) < hist[0]  # still converges
+    assert best["c"].shape == (6,)
+
+
 def test_dspsa_codes_stay_in_range():
     cfg = dspsa.DSPSAConfig(a=50.0, n_states=6)  # aggressive gain
     state = dspsa.init({"c": jnp.full(8, 3, jnp.int32)})

@@ -1,0 +1,63 @@
+"""DSPSA in-situ training convergence regression (paper Algorithm I).
+
+The paper's key robustness claim: on-device discrete training (DSPSA over
+the Table-I switch codes, two hardware measurement passes per step)
+reaches the reported classification accuracy *despite* the measured
+non-idealities.  This pins that behaviour: a seeded 2x2 run on the noisy
+prototype hardware model must land in the paper's accuracy band (Fig. 12a
+reports ~94% for the corner task) within the fixed step budget — on both
+backends, since with the generalized kernels every DSPSA loss evaluation
+is a pure forward pass through the fused Pallas path.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.toys import make_toy_dataset
+from repro.kernels import ops
+from repro.paper.rfnn2x2 import train_rfnn2x2
+
+jax.config.update("jax_platform_name", "cpu")
+
+#: paper band for the Fig. 12a corner task is ~94%; the reduced-size CI
+#: dataset and budget land at 93.1% — gate a point below.
+ACC_BAND = 0.90
+
+
+@pytest.fixture(scope="module")
+def corner_data():
+    return make_toy_dataset("corner", n=160, seed=2)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_dspsa_2x2_converges_on_noisy_hardware(corner_data, backend):
+    x, y = corner_data
+    calls_before = ops.KERNEL_PATH_CALLS["mesh_apply"]
+    net, params, codes, info = train_rfnn2x2(
+        x, y, method="dspsa", steps=200, seed=0, backend=backend)
+    assert info["train_acc"] >= ACC_BAND, info
+    assert 0 <= codes["theta"] < 6 and 0 <= codes["phi"] < 6
+    # the DSPSA history is the two-measurement trace; it must exist and
+    # never leave the finite range
+    assert len(info["dspsa_history"]) >= 2
+    assert np.isfinite(info["dspsa_history"]).all()
+    calls = ops.KERNEL_PATH_CALLS["mesh_apply"] - calls_before
+    if backend == "pallas":
+        # every device measurement pass went through the kernel path
+        assert calls > 0
+    else:
+        assert calls == 0
+
+
+def test_dspsa_backends_agree_end_to_end(corner_data):
+    """Same seed, same data: the discrete training trajectory (selected
+    codes and final accuracy) is backend-invariant."""
+    x, y = corner_data
+    _, _, codes_r, info_r = train_rfnn2x2(x, y, method="dspsa", steps=120,
+                                          seed=0, backend="reference")
+    _, _, codes_p, info_p = train_rfnn2x2(x, y, method="dspsa", steps=120,
+                                          seed=0, backend="pallas")
+    assert codes_r == codes_p
+    np.testing.assert_allclose(info_p["train_acc"], info_r["train_acc"],
+                               atol=1e-3)

@@ -3,11 +3,16 @@
 These pin seeded, deterministic forward numerics (interpret-mode kernels on
 CPU) so future kernel or layer refactors cannot silently drift them:
 
-  * the 2x2 RFNN decision map (paper Fig. 9/10 geometry, ideal hardware);
-  * the 8x8 MNIST RFNN forward logits (Table-I quantized mesh, no noise).
+  * the 2x2 RFNN decision map (paper Fig. 9/10 geometry), on the ideal
+    device *and* on the measured-prototype hardware model (key=None, so the
+    non-idealities are the deterministic ones: hybrid imbalance/phase
+    error, insertion loss, detector floor);
+  * the 8x8 MNIST RFNN forward logits (Table-I quantized mesh), noiseless
+    *and* through the prototype hardware model.
 
 Each golden also asserts the Pallas kernel backend reproduces the pinned
-reference values, so both paths are locked to the same numbers.
+reference values, so both paths are locked to the same numbers — including
+the non-ideal configurations that now run inside the generalized kernels.
 """
 
 import dataclasses
@@ -15,9 +20,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.hardware import IDEAL
 from repro.paper.mnist_rfnn import MnistRFNN
+from repro.paper.prototype import PROTOTYPE
 from repro.paper.rfnn2x2 import RFNN2x2, decision_map
 
 jax.config.update("jax_platform_name", "cpu")
@@ -46,6 +53,30 @@ _GOLDEN_MNIST_LOGITS = np.array([
      0.30987012, -0.114132, -0.45671967, -0.64495933, 0.3314222],
 ], np.float32)
 
+# decision_map(net, {w:[0.9,-1.1], b:0.2}, 3, 5) on the *prototype* device
+# (PROTOTYPE hardware model, key=None): hybrid imbalance, quadrature phase
+# error, 1 dB/cell insertion loss and the detector floor, deterministic.
+_GOLDEN_2X2_MAP_PROTO = np.array([
+    [5.4826808e-01, 1.1116987e-01, 1.2645924e-02, 1.3098384e-03, 1.3428832e-04],
+    [5.7940334e-01, 9.9908483e-01, 9.9135733e-01, 9.2166746e-01, 5.4653698e-01],
+    [6.0841370e-01, 9.9995613e-01, 9.9999893e-01, 9.9999046e-01, 9.9990714e-01],
+    [6.3667744e-01, 9.9996173e-01, 1.0000000e+00, 1.0000000e+00, 1.0000000e+00],
+    [6.6402835e-01, 9.9996626e-01, 1.0000000e+00, 1.0000000e+00, 1.0000000e+00],
+], np.float32)
+
+# MnistRFNN(analog, hardware=PROTOTYPE, quantize="table1") logits for the
+# same probe batch and PRNGKey(0) params — the noisy-device snapshot.
+_GOLDEN_MNIST_NOISY_LOGITS = np.array([
+    [0.08993154, 0.14334643, 0.02779060, 0.02180109, 0.07138671,
+     0.07839968, -0.02473305, -0.01916183, -0.13285044, -0.06138282],
+    [0.08208840, 0.15944149, 0.04169676, 0.07027833, 0.00623865,
+     0.04000926, -0.03337407, -0.00231315, -0.10898143, -0.08906460],
+    [-0.02731646, 0.03858061, -0.02441731, 0.00695287, 0.00901289,
+     0.06005629, -0.04363203, -0.05471498, -0.12011482, 0.07948878],
+    [0.04760969, 0.07048423, -0.09745891, 0.06777238, 0.10435189,
+     0.13688213, -0.05323088, -0.17417204, -0.26159111, 0.10937718],
+], np.float32)
+
 _2X2_PARAMS = {"w": jnp.asarray([0.9, -1.1]), "b": jnp.asarray(0.2)}
 
 
@@ -66,6 +97,28 @@ def test_rfnn2x2_pallas_backend_matches_golden():
     net = RFNN2x2(hardware=IDEAL, backend="pallas")
     _, zmap = decision_map(net, _2X2_PARAMS, 3, 5, lim=30.0, n=5)
     np.testing.assert_allclose(zmap, _GOLDEN_2X2_MAP, atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_rfnn2x2_nonideal_decision_map_golden(backend):
+    """The prototype-hardware decision map, pinned per-backend: the
+    generalized kernel path carries the non-ideal cell exactly."""
+    net = RFNN2x2(hardware=PROTOTYPE, backend=backend)
+    grid, zmap = decision_map(net, _2X2_PARAMS, 3, 5, lim=30.0, n=5)
+    np.testing.assert_allclose(grid, np.linspace(0.0, 30.0, 5), atol=0)
+    np.testing.assert_allclose(zmap, _GOLDEN_2X2_MAP_PROTO, atol=2e-5)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_mnist_noisy_forward_logits_golden(backend):
+    """8x8 noisy-MNIST logits snapshot (prototype hardware model), pinned
+    per-backend."""
+    model = MnistRFNN(analog=True, hardware=PROTOTYPE, quantize="table1",
+                      backend=backend)
+    params = model.init(jax.random.PRNGKey(0))
+    logits = model.apply(params, _mnist_probe())
+    np.testing.assert_allclose(np.asarray(logits),
+                               _GOLDEN_MNIST_NOISY_LOGITS, atol=1e-4)
 
 
 def test_mnist_forward_logits_golden():
