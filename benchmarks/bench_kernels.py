@@ -199,6 +199,75 @@ def rfnn_linear_fwd_bwd(n=16, batch=None) -> list[str]:
                 f"residual_hbm_bytes {hbm_kernel} vs {hbm_autodiff}")]
 
 
+def net_fwd_bwd(configs=None, n_layers=4) -> list[str]:
+    """fwd+bwd through the whole L-layer RFNN: megakernel vs per-layer.
+
+    The per-layer baseline composes L fused ``rfnn_linear`` kernels (each
+    already one pallas_call per direction); the megakernel runs the entire
+    network in ONE pallas_call per direction, keeping inter-layer
+    activations VMEM-resident and saving only the L-1 boundary magnitudes
+    as residuals.  The derived column reports the per-layer composition's
+    timing, the residual-plane count each path stores, and the max grad
+    deviation.  ``net_fwd_bwd_n16_b1024`` is the CI fusion gate row.
+    """
+    from repro.kernels.ops import rfnn_network
+
+    configs = configs or (((16, 1024),) if SMOKE
+                          else ((8, 256), (16, 256), (16, 1024), (16, 2048)))
+    rows = []
+    for n, batch in configs:
+        plan = mesh_lib.clements_plan(n)
+        layers = []
+        for l in range(n_layers):
+            kv, ku, ka = jax.random.split(jax.random.PRNGKey(100 + l), 3)
+            layers.append({
+                "v": mesh_lib.init_mesh_params(kv, plan),
+                "u": mesh_lib.init_mesh_params(ku, plan),
+                "atten": jax.random.uniform(ka, (n,), minval=0.2,
+                                            maxval=0.9),
+                "scale": 1.0,
+            })
+        layers = tuple(layers)
+        x = jax.random.normal(jax.random.PRNGKey(0), (batch, n))
+        w = 1.0 + jnp.arange(n, dtype=jnp.float32)  # break |.|-degeneracy
+
+        def per_layer(ls, xx):
+            h = xx
+            for la in ls:
+                h = ops.rfnn_linear(la["v"], la["atten"], la["u"], h, n=n,
+                                    scale=la["scale"])
+            return h
+
+        def loss_net(ls, xx):
+            return jnp.sum(rfnn_network(ls, xx, n=n) * w)
+
+        def loss_pl(ls, xx):
+            return jnp.sum(per_layer(ls, xx) * w)
+
+        net_fn = jax.jit(jax.grad(loss_net))
+        pl_fn = jax.jit(jax.grad(loss_pl))
+        # min-of-N: this row is a differential CI gate on a shared runner,
+        # so use the noise-robust estimator for both sides
+        us_net = time_call(net_fn, layers, x, iters=5, reduce="min")
+        us_pl = time_call(pl_fn, layers, x, iters=5, reduce="min")
+        gn, gp = net_fn(layers, x), pl_fn(layers, x)
+        scale_ref = max(float(jnp.max(jnp.abs(g)))
+                        for g in jax.tree.leaves(gp))
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree.leaves(gn), jax.tree.leaves(gp)))
+        rel = err / (scale_ref + 1e-30)
+        # both paths save 8 stage-residual planes per layer; the fusion win
+        # is the inter-layer activation round trips (write + fwd read +
+        # bwd read per boundary) and 2L-2 fewer kernel launches/direction
+        interlayer = 3 * (n_layers - 1) * batch * n * 4
+        rows.append(row(f"net_fwd_bwd_n{n}_b{batch}", us_net,
+                        f"per_layer_us={us_pl:.1f};layers={n_layers};"
+                        f"max_grad_rel_err={rel:.1e};"
+                        f"interlayer_hbm_bytes 0 vs {interlayer};"
+                        f"pallas_calls 2 vs {2 * n_layers}"))
+    return rows
+
+
 def flash_attention_kernel(s=None, hd=64, h=4, b=2) -> list[str]:
     """Flash attention kernel vs dense-softmax reference (interpret mode)."""
     s = s or (256 if SMOKE else 512)
@@ -224,4 +293,4 @@ def flash_attention_kernel(s=None, hd=64, h=4, b=2) -> list[str]:
 
 ALL = [mesh_kernel_sweep, fused_rfnn_linear, mesh_kernel_fwd_bwd,
        mesh_fwd_bwd_nonideal, mc_yield_sweep, rfnn_linear_fwd_bwd,
-       flash_attention_kernel]
+       net_fwd_bwd, flash_attention_kernel]

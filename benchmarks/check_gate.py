@@ -1,58 +1,107 @@
 """Performance gate over a benchmark JSON document (CI smoke job).
 
-Fails (exit 1) when the Pallas fwd+bwd mesh path is slower than reference
-autodiff at N=16 — the regression this repo's kernels exist to prevent.
-The reference timing rides in each row's derived column as
-``ref_autodiff_us=...``.
+Fails (exit 1) when a fused Pallas path is slower than its unfused
+baseline — the regressions this repo's kernels exist to prevent:
 
-    PYTHONPATH=src python -m benchmarks.check_gate BENCH_kernels.json
+* ``mesh_fwd_bwd_n16`` — the kernel custom-VJP mesh path must beat
+  reference autodiff (``ref_autodiff_us`` in the derived column);
+* ``net_fwd_bwd_n16_b1024`` — the whole-network megakernel (one
+  pallas_call per direction for the 4-layer RFNN) must beat the
+  per-layer kernel composition (``per_layer_us``).
+
+With ``--prev PREV.json`` it additionally diffs each timed row against a
+previous run (the committed ``BENCH_kernels.json`` trajectory) and
+*warns* — without failing — on regressions beyond ``--warn-threshold``
+(default 20%).  Warnings stay advisory because absolute CI-runner timings
+are noisy; the differential gates above are the hard contract.
+
+    PYTHONPATH=src python -m benchmarks.check_gate BENCH_kernels.json \
+        [--prev BENCH_prev.json] [--warn-threshold 0.2]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import re
 import sys
 
-GATED_ROWS = ("mesh_fwd_bwd_n16",)
+#: gated row -> the derived-column field holding the unfused baseline
+GATED_ROWS = {
+    "mesh_fwd_bwd_n16": "ref_autodiff_us",
+    "net_fwd_bwd_n16_b1024": "per_layer_us",
+}
 
 
 def check(doc: dict) -> list[str]:
     problems = []
     rows = {r["name"]: r for r in doc.get("rows", [])}
-    for name in GATED_ROWS:
+    for name, baseline_field in GATED_ROWS.items():
         r = rows.get(name)
         if r is None:
             problems.append(f"{name}: gated row missing from document")
             continue
         us = r.get("us_per_call")
-        m = re.search(r"ref_autodiff_us=([0-9.]+)", r.get("derived", ""))
+        m = re.search(rf"{baseline_field}=([0-9.]+)", r.get("derived", ""))
         if us is None or m is None:
-            problems.append(f"{name}: no kernel/reference timing pair")
+            problems.append(f"{name}: no kernel/baseline timing pair")
             continue
-        ref_us = float(m.group(1))
-        if us > ref_us:
+        baseline_us = float(m.group(1))
+        if us > baseline_us:
             problems.append(
-                f"{name}: Pallas fwd+bwd {us:.1f}us slower than "
-                f"reference autodiff {ref_us:.1f}us")
+                f"{name}: fused path {us:.1f}us slower than "
+                f"{baseline_field} baseline {baseline_us:.1f}us")
     if doc.get("failures"):
         problems.append(f"benchmark run recorded {doc['failures']} failures")
     return problems
 
 
+def diff_previous(doc: dict, prev: dict, threshold: float) -> list[str]:
+    """Advisory warnings for rows slower than the previous run."""
+    warnings = []
+    prev_rows = {r["name"]: r for r in prev.get("rows", [])}
+    for r in doc.get("rows", []):
+        us = r.get("us_per_call")
+        p = prev_rows.get(r["name"])
+        if us is None or p is None or not p.get("us_per_call"):
+            continue
+        prev_us = p["us_per_call"]
+        if us > prev_us * (1.0 + threshold):
+            warnings.append(
+                f"{r['name']}: {us:.1f}us vs previous {prev_us:.1f}us "
+                f"(+{(us / prev_us - 1) * 100:.0f}%)")
+    return warnings
+
+
 def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    if len(argv) != 1:
-        print(__doc__, file=sys.stderr)
-        return 2
-    with open(argv[0]) as f:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("json_path", help="benchmark JSON document to gate")
+    ap.add_argument("--prev", default=None,
+                    help="previous run to diff against (warnings only)")
+    ap.add_argument("--warn-threshold", type=float, default=0.2,
+                    help="relative slowdown vs --prev that triggers a "
+                         "warning (default 0.2 = 20%%)")
+    args = ap.parse_args(argv)
+    with open(args.json_path) as f:
         doc = json.load(f)
+
+    if args.prev:
+        try:
+            with open(args.prev) as f:
+                prev = json.load(f)
+        except OSError as e:
+            print(f"GATE WARN: cannot read previous run: {e}",
+                  file=sys.stderr)
+        else:
+            for w in diff_previous(doc, prev, args.warn_threshold):
+                print(f"GATE WARN: {w}", file=sys.stderr)
+
     problems = check(doc)
     for p in problems:
         print(f"GATE FAIL: {p}", file=sys.stderr)
     if not problems:
-        print("benchmark gate passed: kernel fwd+bwd beats reference "
-              "autodiff on every gated row")
+        print("benchmark gate passed: every fused path beats its unfused "
+              "baseline on the gated rows")
     return 1 if problems else 0
 
 

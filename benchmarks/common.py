@@ -13,8 +13,14 @@ import jax
 SMOKE = os.environ.get("BENCH_SMOKE", "") == "1"
 
 
-def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
-    """Median wall time of a (jitted) call in microseconds."""
+def time_call(fn, *args, warmup: int = 2, iters: int = 10,
+              reduce: str = "median") -> float:
+    """Wall time of a (jitted) call in microseconds.
+
+    ``reduce="median"`` (default) or ``"min"`` — min is the conventional
+    noise-robust estimator for differential comparisons on shared/loaded
+    hosts (both sides lose the same scheduler noise).
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -23,7 +29,7 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    return (times[0] if reduce == "min" else times[len(times) // 2]) * 1e6
 
 
 def row(name: str, us_per_call: float | None, derived: str) -> str:

@@ -1,19 +1,23 @@
 """Benchmark harness entry point: one benchmark per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows, and optionally writes the
-same rows as a JSON document (``--json``) for trajectory tracking — the
-CI smoke job uploads ``BENCH_kernels.json`` per commit.
+Prints ``name,us_per_call,derived`` CSV rows and writes the same rows as
+a JSON document for trajectory tracking: by default (kernel suites) to
+``BENCH_kernels.json`` at the repo root — the committed copy is the
+previous run the CI smoke job diffs fresh numbers against
+(``benchmarks.check_gate --prev``) before uploading the new document.
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run --only fig15
     BENCH_SMOKE=1 PYTHONPATH=src python -m benchmarks.run \
-        --only kernel --json BENCH_kernels.json        # CI tiny config
+        --only kernel --json BENCH_new.json            # CI tiny config
+    PYTHONPATH=src python -m benchmarks.run --suite kernels --json -  # no file
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
 import time
@@ -21,6 +25,9 @@ import time
 import jax
 
 jax.config.update("jax_platform_name", "cpu")
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_JSON = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
 
 
 def _parse_row(line: str) -> dict:
@@ -38,8 +45,14 @@ def main(argv=None) -> int:
                     choices=("all", "paper", "kernels"),
                     help="benchmark module to run")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the rows as a JSON document")
+                    help="write the rows as a JSON document; defaults to "
+                         "BENCH_kernels.json at the repo root when the "
+                         "kernels suite runs; '-' disables the file")
     args = ap.parse_args(argv)
+    if args.json is None and args.suite in ("all", "kernels"):
+        args.json = DEFAULT_JSON
+    if args.json == "-":
+        args.json = None
 
     from benchmarks import bench_kernels, bench_paper
     from benchmarks.common import SMOKE

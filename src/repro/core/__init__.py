@@ -24,7 +24,12 @@ from repro.core.quantize import (
     uniform_codebook,
 )
 from repro.core.hardware import IDEAL, HardwareModel, apply_mesh_hw, detect_magnitude
-from repro.core.analog_linear import AnalogLinear, AnalogUnitary, TiledAnalogLinear
+from repro.core.analog_linear import (
+    AnalogLinear,
+    AnalogSequence,
+    AnalogUnitary,
+    TiledAnalogLinear,
+)
 from repro.core.activations import abs_detect, get_activation
 
 __all__ = [
@@ -34,6 +39,6 @@ __all__ = [
     "fit_program", "random_unitary", "reck_program", "SynthesizedMatrix",
     "synthesize", "ste_quantize", "table_i_codebook", "uniform_codebook",
     "IDEAL", "HardwareModel", "apply_mesh_hw", "detect_magnitude",
-    "AnalogLinear", "AnalogUnitary", "TiledAnalogLinear", "abs_detect",
-    "get_activation",
+    "AnalogLinear", "AnalogSequence", "AnalogUnitary", "TiledAnalogLinear",
+    "abs_detect", "get_activation",
 ]

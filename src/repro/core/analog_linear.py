@@ -233,6 +233,93 @@ class AnalogLinear:
 
 
 @dataclasses.dataclass(frozen=True)
+class AnalogSequence:
+    """An L-deep stack of square n x n analog linear layers (the paper's
+    multi-layer microwave ANN, Sec. V): per layer V-mesh -> attenuation ->
+    U-mesh -> digital scale -> |detect|, the detected magnitude feeding the
+    next layer.
+
+    With ``backend="pallas"`` the **whole network** runs as one fused
+    Pallas megakernel per direction (``repro.kernels.ops.rfnn_network``):
+    inter-layer activations never round-trip through HBM, and packed
+    coefficients are cached per parameter identity, so steady-state
+    inference does zero packing work.  The reference backend composes the
+    per-layer :class:`AnalogLinear` modules; both backends consume
+    identical PRNG keys, so they agree draw-for-draw under phase noise.
+
+    Inter-layer detection is the ideal magnitude ``|.|`` (the RF signal is
+    re-modulated layer to layer); the detector chain's noise and
+    sensitivity floor apply once, at the network readout (``output="abs"``
+    with a hardware model).
+    """
+
+    n: int
+    depth: int
+    quantize: str | None = None
+    hardware: hw_lib.HardwareModel | None = None
+    output: OutputMode = "abs"
+    backend: Backend = "reference"
+
+    def __post_init__(self):
+        if self.depth < 1:
+            raise ValueError(f"depth must be >= 1, got {self.depth}")
+        layer = AnalogLinear(in_dim=self.n, out_dim=self.n,
+                             quantize=self.quantize, hardware=self.hardware,
+                             output="complex", backend=self.backend)
+        object.__setattr__(self, "_layer", layer)
+
+    @property
+    def layer(self) -> AnalogLinear:
+        return self._layer  # type: ignore[attr-defined]
+
+    def init(self, key: Array) -> dict:
+        keys = jax.random.split(key, self.depth)
+        return {"layers": tuple(self.layer.init(k) for k in keys)}
+
+    def _keys(self, key: Array | None):
+        """Per-layer keys + the readout key; the fused path splits each
+        layer key exactly like ``AnalogLinear.apply`` (kv, ku, kd)."""
+        if key is None or self.hardware is None:
+            return (None,) * self.depth, None
+        return (tuple(jax.random.fold_in(key, l) for l in range(self.depth)),
+                jax.random.fold_in(key, self.depth))
+
+    def apply(self, params: dict, x: Array, *, key: Array | None = None) -> Array:
+        xc = _as_complex(x)
+        layer_keys, kdet = self._keys(key)
+        if self.backend == "pallas":
+            layer_args = kernel_ops.memoize_by_leaf_ids(
+                ("analog_sequence_args", self), (params["layers"], layer_keys),
+                lambda: self._layer_args(params["layers"], layer_keys))
+            y = kernel_ops.rfnn_network(layer_args, xc, n=self.n,
+                                        hardware=self.hardware)
+            return _readout(y, self.output, self.hardware, kdet)
+        h = xc
+        for l in range(self.depth):
+            h = jnp.abs(self.layer.apply(params["layers"][l], h,
+                                         key=layer_keys[l]))
+        return _readout(h, self.output, self.hardware, kdet)
+
+    def _layer_args(self, layer_params, layer_keys) -> tuple:
+        args = []
+        for p, k in zip(layer_params, layer_keys):
+            la = {
+                "v": self.layer._quant(p["v"]),
+                "u": self.layer._quant(p["u"]),
+                "atten": jax.nn.sigmoid(p["atten_logit"]),
+                "scale": jax.nn.softplus(p["log_scale"]),
+            }
+            if k is not None:
+                kv, ku, _ = jax.random.split(k, 3)
+                la["key_v"], la["key_u"] = kv, ku
+            args.append(la)
+        return tuple(args)
+
+    def n_cells(self) -> int:
+        return self.depth * self.layer.n_cells()
+
+
+@dataclasses.dataclass(frozen=True)
 class TiledAnalogLinear:
     """A large (out x in) matmul as a grid of analog tile processors.
 

@@ -23,6 +23,7 @@ Pallas kernel in ``repro.kernels.givens_mesh`` (batch panel resident in VMEM).
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -39,9 +40,14 @@ _ROLE_NONE, _ROLE_TOP, _ROLE_BOT = 0, 1, 2
 # Mesh plan (static layout metadata)
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class MeshPlan:
     """Static layout of a cell mesh.
+
+    Hashable *by content* (``n`` + the top/active layout bytes; slot/role
+    are derived), so plans can key ``functools.lru_cache``-memoized
+    schedule lowering and serve as jit statics: two independently
+    constructed but identical plans hit the same caches.
 
     Attributes:
       n: number of channels (even).
@@ -56,6 +62,18 @@ class MeshPlan:
     active: np.ndarray
     slot: np.ndarray
     role: np.ndarray
+
+    def _key(self) -> tuple:
+        return (self.n, self.top.shape,
+                self.top.tobytes(), self.active.tobytes())
+
+    def __eq__(self, other):
+        if not isinstance(other, MeshPlan):
+            return NotImplemented
+        return self._key() == other._key()
+
+    def __hash__(self):
+        return hash(self._key())
 
     @property
     def n_columns(self) -> int:
@@ -95,6 +113,7 @@ def _make_plan(n: int, top: np.ndarray, active: np.ndarray) -> MeshPlan:
     return MeshPlan(n=n, top=top, active=active, slot=slot, role=role)
 
 
+@functools.lru_cache(maxsize=64)
 def clements_plan(n: int) -> MeshPlan:
     """Rectangular mesh: N columns, alternating offsets; N(N-1)/2 cells."""
     if n < 2 or n % 2:

@@ -25,6 +25,10 @@ Kernels:
   * ``rfnn_linear_kernel`` — fused analog linear layer
     V-mesh -> diag gain -> U-mesh -> |detect| (paper Eq. 31 + Fig. 14),
     one VMEM residency for the whole layer.
+  * ``network_kernel`` — the whole L-layer RFNN (stacked per-layer
+    coefficient/parity/gain tensors) in one VMEM residency: inter-layer
+    activations never touch HBM, the TPU analogue of the paper's
+    end-to-end analog signal path (Sec. V).
   * ``mesh_bwd_kernel`` / ``rfnn_linear_bwd_kernel`` — the custom VJPs.
     The backward pass re-runs the column sequence *in reverse*, carrying
     two coefficient tensors: the per-cell analytic **2x2 inverse** rebuilds
@@ -211,11 +215,13 @@ def adjoint_coefficients(coef: jax.Array) -> jax.Array:
     adjoint propagates the cotangent in the reversed sweep: the transpose
     of the real-representation Jacobian of ``y = T x`` is ``T^H`` for any
     complex ``T``.  For unitary columns it is also the exact inverse, which
-    is the PR-1 state-recompute trick as a special case.
+    is the PR-1 state-recompute trick as a special case.  Rows live on axis
+    -2, so both per-mesh ``[C, 8, P]`` and stacked network ``[L, C, 8, P]``
+    layouts transform in place.
     """
     idx = jnp.asarray([0, 1, 4, 5, 2, 3, 6, 7])
     sign = jnp.asarray([1.0, -1.0] * 4, coef.dtype)
-    return coef[:, idx, :] * sign[None, :, None]
+    return jnp.take(coef, idx, axis=-2) * sign[:, None]
 
 
 def inverse_coefficients(coef: jax.Array, eps: float = 1e-12) -> jax.Array:
@@ -226,12 +232,14 @@ def inverse_coefficients(coef: jax.Array, eps: float = 1e-12) -> jax.Array:
     **non-unitary** cells (hybrid imbalance, per-cell insertion loss) with
     no per-column residuals: ``s_c = T_c^{-1} s_{c+1}``.  Hardware cells
     are well-conditioned (|det| ~ cell_gain^2); ``eps`` guards the
-    identity-padded slots' neighbourhood against exact zeros.
+    identity-padded slots' neighbourhood against exact zeros.  Like
+    :func:`adjoint_coefficients`, rows live on axis -2 (works on ``[C, 8,
+    P]`` and ``[L, C, 8, P]`` alike).
     """
-    t00 = coef[:, 0] + 1j * coef[:, 1]
-    t01 = coef[:, 2] + 1j * coef[:, 3]
-    t10 = coef[:, 4] + 1j * coef[:, 5]
-    t11 = coef[:, 6] + 1j * coef[:, 7]
+    t00 = coef[..., 0, :] + 1j * coef[..., 1, :]
+    t01 = coef[..., 2, :] + 1j * coef[..., 3, :]
+    t10 = coef[..., 4, :] + 1j * coef[..., 5, :]
+    t11 = coef[..., 6, :] + 1j * coef[..., 7, :]
     det = t00 * t11 - t01 * t10
     inv_det = jnp.conj(det) / jnp.maximum(jnp.abs(det) ** 2, eps)
     i00, i01 = t11 * inv_det, -t01 * inv_det
@@ -239,7 +247,7 @@ def inverse_coefficients(coef: jax.Array, eps: float = 1e-12) -> jax.Array:
     out = jnp.stack(
         [jnp.real(i00), jnp.imag(i00), jnp.real(i01), jnp.imag(i01),
          jnp.real(i10), jnp.imag(i10), jnp.real(i11), jnp.imag(i11)],
-        axis=1,
+        axis=-2,
     )
     return out.astype(coef.dtype)
 
@@ -279,17 +287,23 @@ def _coef_grad(parity_ref, c, s_in, g_out):
 
 
 def _run_columns_bwd(coef_inv_ref, coef_adj_ref, parity_ref, dcoef_ref,
-                     state, cot):
+                     state, cot, layer=None):
     """Reversed column sweep: recompute states via the per-cell inverse,
     accumulate coefficient gradients, propagate the cotangent via the
-    adjoint.  ``state`` starts at the mesh *output*."""
+    adjoint.  ``state`` starts at the mesh *output*.  ``layer`` (a static
+    int) selects the leading index of a stacked ``[L, C, 8, P]`` gradient
+    accumulator — the network kernel's per-layer slot."""
     n_cols = coef_inv_ref.shape[0]
 
     def body(k, carry):
         c = n_cols - 1 - k
         s, g = carry[0:4], carry[4:8]
         s_in = _column_body(coef_inv_ref, parity_ref, c, s)   # T_c^{-1} s_{c+1}
-        dcoef_ref[c] = dcoef_ref[c] + _coef_grad(parity_ref, c, s_in, g)
+        grad = _coef_grad(parity_ref, c, s_in, g)
+        if layer is None:
+            dcoef_ref[c] = dcoef_ref[c] + grad
+        else:
+            dcoef_ref[layer, c] = dcoef_ref[layer, c] + grad
         g_in = _column_body(coef_adj_ref, parity_ref, c, g)   # T_c^H g_{c+1}
         return (*s_in, *g_in)
 
@@ -484,5 +498,302 @@ def rfnn_linear_bwd_pallas_call(n: int, n_cols_v: int, n_cols_u: int,
                             + 3 * (n_cols_v + n_cols_u) * 8 * p * 4
                             + 2 * 8 * p * 4) * n_batch_blocks,
             transcendentals=batch_block * p * 2 * n_batch_blocks,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Network megakernel: the whole L-layer RFNN in one VMEM residency
+# ---------------------------------------------------------------------------
+#
+# Per layer: pre-gain g0 (input phase screens) -> V-mesh -> mid gain g1
+# (attenuation + folded screens) -> U-mesh -> post gain g2 (digital scale +
+# output screen) -> |detect|; the detected magnitudes re-enter the next
+# layer as a real signal (zero imaginary planes) without ever leaving VMEM —
+# the TPU analogue of the paper's end-to-end analog signal path (Sec. V,
+# Fig. 14).  Gains are [L, 12, P]: rows 0-3 g0, 4-7 g1, 8-11 g2, each as
+# (even re, even im, odd re, odd im).  Coefficients/parities are stacked
+# [L, C, 8, P] / [L, C, 1] with identity-column padding (see
+# ``repro.kernels.schedule.NetworkSchedule``).
+#
+# Residuals follow the single-layer kernel's rule: everything inside a
+# mesh is recomputed by the reversed inverse/adjoint sweep (no per-column
+# state), but |z| is not invertible, so each layer saves its two pre-gain
+# stage boundaries (post-V, post-U) — 8 stacked [L, B, P] planes total,
+# identical to what the per-layer composition would have stored, minus all
+# the inter-layer HBM round trips and per-layer kernel launches.  The
+# layer-boundary activations themselves are NOT stored: a layer's input is
+# re-detected from the *previous* layer's saved post-U state (one cheap
+# elementwise |g2 u| — no sweep), so the megakernel adds zero residual
+# traffic over the per-layer path while fusing L layers into one call.
+
+
+def _net_layer_stages(coef_v, par_v, coef_u, par_u, g, state):
+    """g0 -> V -> g1 -> U for one layer; returns (v, u) stage states."""
+    er, ei = _cmul(state[0], state[1], g[0], g[1])
+    orr, oi = _cmul(state[2], state[3], g[2], g[3])
+    v = _run_columns(coef_v, par_v, (er, ei, orr, oi))
+    er, ei = _cmul(v[0], v[1], g[4], g[5])
+    orr, oi = _cmul(v[2], v[3], g[6], g[7])
+    u = _run_columns(coef_u, par_u, (er, ei, orr, oi))
+    return v, u
+
+
+def _net_layer_detect(u, g):
+    """g2 -> |detect| on a layer's U-stage output."""
+    zer, zei = _cmul(u[0], u[1], g[8], g[9])
+    zor, zoi = _cmul(u[2], u[3], g[10], g[11])
+    oe = jnp.sqrt(zer * zer + zei * zei)
+    oo = jnp.sqrt(zor * zor + zoi * zoi)
+    return oe, oo
+
+
+def network_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref, gains_ref,
+                   xer_ref, xei_ref, xor_ref, xoi_ref, oe_ref, oo_ref):
+    """Inference megakernel: all L layers, one batch block, one residency."""
+    n_layers = coef_v_ref.shape[0]
+    state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
+    for l in range(n_layers):
+        v, u = _net_layer_stages(coef_v_ref[l], par_v_ref[l],
+                                 coef_u_ref[l], par_u_ref[l],
+                                 gains_ref[l], state)
+        oe, oo = _net_layer_detect(u, gains_ref[l])
+        zero = jnp.zeros_like(oe)
+        state = (oe, zero, oo, zero)
+    oe_ref[...] = state[0]
+    oo_ref[...] = state[2]
+
+
+def network_fwd_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
+                       gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
+                       oe_ref, oo_ref,
+                       sver_ref, svei_ref, svor_ref, svoi_ref,
+                       suer_ref, suei_ref, suor_ref, suoi_ref):
+    """VJP forward: identical sweep, plus every layer's two pre-gain stage
+    boundaries (post-V, post-U) into stacked [L, B, P] residuals."""
+    n_layers = coef_v_ref.shape[0]
+    state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
+    for l in range(n_layers):
+        v, u = _net_layer_stages(coef_v_ref[l], par_v_ref[l],
+                                 coef_u_ref[l], par_u_ref[l],
+                                 gains_ref[l], state)
+        sver_ref[l], svei_ref[l], svor_ref[l], svoi_ref[l] = v
+        suer_ref[l], suei_ref[l], suor_ref[l], suoi_ref[l] = u
+        oe, oo = _net_layer_detect(u, gains_ref[l])
+        zero = jnp.zeros_like(oe)
+        state = (oe, zero, oo, zero)
+    oe_ref[...] = state[0]
+    oo_ref[...] = state[2]
+
+
+def _net_layer_bwd(cv_inv, cv_adj, par_v, cu_inv, cu_adj, par_u, g,
+                   x_in, v, u, goe, goo, dcv_ref, dcu_ref, layer):
+    """Unwind one layer: |detect| -> g2 -> U -> g1 -> V -> g0.
+
+    ``x_in``/``v``/``u`` are the recomputed layer input and stage states;
+    accumulates coefficient gradients into layer slot ``layer`` of the
+    stacked accumulators and returns ``(dgains [12, P], gx planes)``.
+    """
+    # |detect| backward: d|z|/dz = z/|z| (0 at the origin, which also kills
+    # zero-padded batch rows).
+    zer, zei = _cmul(u[0], u[1], g[8], g[9])
+    zor, zoi = _cmul(u[2], u[3], g[10], g[11])
+    me = jnp.sqrt(zer * zer + zei * zei)
+    mo = jnp.sqrt(zor * zor + zoi * zoi)
+    inv_e = jnp.where(me > 0, goe / jnp.where(me > 0, me, 1.0), 0.0)
+    inv_o = jnp.where(mo > 0, goo / jnp.where(mo > 0, mo, 1.0), 0.0)
+    gzer, gzei = inv_e * zer, inv_e * zei
+    gzor, gzoi = inv_o * zor, inv_o * zoi
+
+    dg2 = (_conj_dot(u[0], u[1], gzer, gzei)
+           + _conj_dot(u[2], u[3], gzor, gzoi))
+    guer, guei = _cmul(g[8], -g[9], gzer, gzei)
+    guor, guoi = _cmul(g[10], -g[11], gzor, gzoi)
+
+    _, gh = _run_columns_bwd(cu_inv, cu_adj, par_u, dcu_ref, u,
+                             (guer, guei, guor, guoi), layer=layer)
+
+    dg1 = (_conj_dot(v[0], v[1], gh[0], gh[1])
+           + _conj_dot(v[2], v[3], gh[2], gh[3]))
+    gver, gvei = _cmul(g[4], -g[5], gh[0], gh[1])
+    gvor, gvoi = _cmul(g[6], -g[7], gh[2], gh[3])
+
+    _, gs0 = _run_columns_bwd(cv_inv, cv_adj, par_v, dcv_ref, v,
+                              (gver, gvei, gvor, gvoi), layer=layer)
+
+    # pre-gain g0: s0 = g0 * x_in
+    dg0 = (_conj_dot(x_in[0], x_in[1], gs0[0], gs0[1])
+           + _conj_dot(x_in[2], x_in[3], gs0[2], gs0[3]))
+    gxer, gxei = _cmul(g[0], -g[1], gs0[0], gs0[1])
+    gxor, gxoi = _cmul(g[2], -g[3], gs0[2], gs0[3])
+
+    dg = jnp.concatenate(list(dg0) + list(dg1) + list(dg2), axis=0)
+    return dg, (gxer, gxei, gxor, gxoi)
+
+
+def network_bwd_kernel(cv_inv_ref, cv_adj_ref, par_v_ref,
+                       cu_inv_ref, cu_adj_ref, par_u_ref, gains_ref,
+                       xer_ref, xei_ref, xor_ref, xoi_ref,
+                       sver_ref, svei_ref, svor_ref, svoi_ref,
+                       suer_ref, suei_ref, suor_ref, suoi_ref,
+                       goe_ref, goo_ref,
+                       dcv_ref, dcu_ref, dg_ref,
+                       dxer_ref, dxei_ref, dxor_ref, dxoi_ref):
+    """Unwind the whole network in one residency, layers in reverse.
+
+    Each layer unwinds from its saved stage boundaries with the
+    inverse/adjoint sweeps (no forward recompute); its *input* activation
+    — needed only for the g0 gradient — is re-detected from the previous
+    layer's saved post-U state (one elementwise |g2 u|).  Crossing a
+    boundary keeps only the real cotangent planes — the imaginary planes
+    of an inter-layer input are structurally zero.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dcv_ref[...] = jnp.zeros(dcv_ref.shape, dcv_ref.dtype)
+        dcu_ref[...] = jnp.zeros(dcu_ref.shape, dcu_ref.dtype)
+        dg_ref[...] = jnp.zeros(dg_ref.shape, dg_ref.dtype)
+
+    n_layers = cv_inv_ref.shape[0]
+    goe, goo = goe_ref[...], goo_ref[...]
+    for l in range(n_layers - 1, -1, -1):
+        if l == 0:
+            x_in = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
+        else:
+            u_prev = (suer_ref[l - 1], suei_ref[l - 1],
+                      suor_ref[l - 1], suoi_ref[l - 1])
+            be, bo = _net_layer_detect(u_prev, gains_ref[l - 1])
+            zero = jnp.zeros_like(be)
+            x_in = (be, zero, bo, zero)
+        g = gains_ref[l]
+        v = (sver_ref[l], svei_ref[l], svor_ref[l], svoi_ref[l])
+        u = (suer_ref[l], suei_ref[l], suor_ref[l], suoi_ref[l])
+        dg, gx = _net_layer_bwd(
+            cv_inv_ref[l], cv_adj_ref[l], par_v_ref[l],
+            cu_inv_ref[l], cu_adj_ref[l], par_u_ref[l],
+            g, x_in, v, u, goe, goo, dcv_ref, dcu_ref, l)
+        dg_ref[l] = dg_ref[l] + dg
+        if l > 0:
+            goe, goo = gx[0], gx[2]
+        else:
+            dxer_ref[...] = gx[0]
+            dxei_ref[...] = gx[1]
+            dxor_ref[...] = gx[2]
+            dxoi_ref[...] = gx[3]
+
+
+def _net_coef_spec(n_layers: int, n_cols: int, p: int):
+    return pl.BlockSpec((n_layers, n_cols, 8, p), lambda i: (0, 0, 0, 0))
+
+
+def _net_parity_spec(n_layers: int, n_cols: int):
+    return pl.BlockSpec((n_layers, n_cols, 1), lambda i: (0, 0, 0))
+
+
+def _net_gains_spec(n_layers: int, p: int):
+    return pl.BlockSpec((n_layers, 12, p), lambda i: (0, 0, 0))
+
+
+def _net_flops_per_block(n: int, n_layers: int, n_cols: int,
+                         batch_block: int) -> int:
+    p = n // 2
+    return 2 * n_layers * (2 * n_cols * p * 16 + 9 * n) * batch_block
+
+
+def network_pallas_call(n: int, n_layers: int, n_cols: int, batch_block: int,
+                        n_batch_blocks: int, interpret: bool):
+    p = n // 2
+    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
+                                      jnp.float32)] * 2
+    flops = _net_flops_per_block(n, n_layers, n_cols, batch_block)
+    return pl.pallas_call(
+        network_kernel,
+        grid=(n_batch_blocks,),
+        in_specs=[_net_coef_spec(n_layers, n_cols, p),
+                  _net_parity_spec(n_layers, n_cols),
+                  _net_coef_spec(n_layers, n_cols, p),
+                  _net_parity_spec(n_layers, n_cols),
+                  _net_gains_spec(n_layers, p),
+                  plane, plane, plane, plane],
+        out_specs=[plane] * 2,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops * n_batch_blocks,
+            bytes_accessed=(6 * batch_block * p * 4
+                            + 2 * n_layers * n_cols * 8 * p * 4
+                            + n_layers * 12 * p * 4) * n_batch_blocks,
+            transcendentals=n_layers * batch_block * p * 2 * n_batch_blocks,
+        ),
+    )
+
+
+def network_fwd_pallas_call(n: int, n_layers: int, n_cols: int,
+                            batch_block: int, n_batch_blocks: int,
+                            interpret: bool):
+    p = n // 2
+    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
+    stage = pl.BlockSpec((n_layers, batch_block, p), lambda i: (0, i, 0))
+    b_total = n_batch_blocks * batch_block
+    out_shape = (
+        [jax.ShapeDtypeStruct((b_total, p), jnp.float32)] * 2
+        + [jax.ShapeDtypeStruct((n_layers, b_total, p), jnp.float32)] * 8)
+    flops = _net_flops_per_block(n, n_layers, n_cols, batch_block)
+    return pl.pallas_call(
+        network_fwd_kernel,
+        grid=(n_batch_blocks,),
+        in_specs=[_net_coef_spec(n_layers, n_cols, p),
+                  _net_parity_spec(n_layers, n_cols),
+                  _net_coef_spec(n_layers, n_cols, p),
+                  _net_parity_spec(n_layers, n_cols),
+                  _net_gains_spec(n_layers, p),
+                  plane, plane, plane, plane],
+        out_specs=[plane, plane] + [stage] * 8,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops * n_batch_blocks,
+            bytes_accessed=((6 + 8 * n_layers) * batch_block * p * 4
+                            + 2 * n_layers * n_cols * 8 * p * 4
+                            + n_layers * 12 * p * 4) * n_batch_blocks,
+            transcendentals=n_layers * batch_block * p * 2 * n_batch_blocks,
+        ),
+    )
+
+
+def network_bwd_pallas_call(n: int, n_layers: int, n_cols: int,
+                            batch_block: int, n_batch_blocks: int,
+                            interpret: bool):
+    p = n // 2
+    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
+    stage = pl.BlockSpec((n_layers, batch_block, p), lambda i: (0, i, 0))
+    out_shape = (
+        [jax.ShapeDtypeStruct((n_layers, n_cols, 8, p), jnp.float32)] * 2
+        + [jax.ShapeDtypeStruct((n_layers, 12, p), jnp.float32)]
+        + [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
+                                jnp.float32)] * 4)
+    # inverse state recompute + adjoint cotangent + coefficient grads
+    flops = 3 * _net_flops_per_block(n, n_layers, n_cols, batch_block)
+    return pl.pallas_call(
+        network_bwd_kernel,
+        grid=(n_batch_blocks,),
+        in_specs=[_net_coef_spec(n_layers, n_cols, p)] * 2
+        + [_net_parity_spec(n_layers, n_cols)]
+        + [_net_coef_spec(n_layers, n_cols, p)] * 2
+        + [_net_parity_spec(n_layers, n_cols),
+           _net_gains_spec(n_layers, p),
+           plane, plane, plane, plane]
+        + [stage] * 8 + [plane, plane],
+        out_specs=[_net_coef_spec(n_layers, n_cols, p)] * 2
+        + [_net_gains_spec(n_layers, p)] + [plane] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops * n_batch_blocks,
+            bytes_accessed=((10 + 8 * n_layers) * batch_block * p * 4
+                            + 6 * n_layers * n_cols * 8 * p * 4
+                            + 2 * n_layers * 12 * p * 4) * n_batch_blocks,
+            transcendentals=n_layers * batch_block * p * 2 * n_batch_blocks,
         ),
     )

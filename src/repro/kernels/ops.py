@@ -34,7 +34,10 @@ from repro.kernels import givens_mesh, ref
 from repro.kernels.schedule import (
     MeshSchedule,
     clements_schedule,
+    network_parity_arrays,
+    network_schedule,
     pack_cells,
+    pad_columns,
     parity_array,
     schedule_from_plan,
 )
@@ -45,7 +48,18 @@ Array = jax.Array
 #: Tests use this to assert the Pallas path is actually taken (there is no
 #: silent reference fallback left to fall into).  Counts tick on every
 #: public-wrapper call (trace time under an outer jit).
-KERNEL_PATH_CALLS = {"mesh_apply": 0, "rfnn_linear": 0, "mesh_apply_cells": 0}
+KERNEL_PATH_CALLS = {"mesh_apply": 0, "rfnn_linear": 0, "mesh_apply_cells": 0,
+                     "rfnn_network": 0}
+
+#: Instrumentation: number of times each jitted impl was actually *traced*.
+#: Regression tests use this to pin the schedule/trace-cache memoization —
+#: structurally equal plans must not re-trigger traces.
+TRACE_COUNTS = {"mesh_apply": 0, "rfnn_linear": 0, "rfnn_network": 0}
+
+#: Instrumentation: number of coefficient-pack builds actually executed by
+#: :func:`rfnn_network` (cache misses / tracer bypasses).  Steady-state
+#: serving must not tick this.
+PACK_EVENTS = {"rfnn_network": 0}
 
 
 def _default_interpret() -> bool:
@@ -175,6 +189,7 @@ def _run_mesh_planes(sched, x2, coef, block_b, interpret):
 @functools.partial(jax.jit,
                    static_argnums=(0, 1, 2, 3))
 def _mesh_apply_impl(sched, hardware, block_b, interpret, params, x, key):
+    TRACE_COUNTS["mesh_apply"] += 1  # python side effect: runs at trace only
     batch_shape = x.shape[:-1]
     x2 = x.reshape((-1, sched.n)).astype(jnp.complex64)
     alpha_in = params.get("alpha_in")
@@ -246,6 +261,7 @@ def mesh_apply_cells(t_all: Array, x: Array, *, plan: mesh_lib.MeshPlan,
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
 def _rfnn_linear_impl(sched_v, sched_u, hardware, block_b, interpret,
                       v_params, atten, u_params, x, scale, key_v, key_u):
+    TRACE_COUNTS["rfnn_linear"] += 1  # python side effect: trace time only
     n = sched_v.n
     batch_shape = x.shape[:-1]
     x2 = x.reshape((-1, n)).astype(jnp.complex64)
@@ -312,3 +328,220 @@ def rfnn_linear(v_params: dict, atten: Array, u_params: dict, x: Array, *,
     return _rfnn_linear_impl(sched_v, sched_u, hardware, block_b, interpret,
                              v_params, atten, u_params, x,
                              jnp.asarray(scale, jnp.float32), key_v, key_u)
+
+
+# ---------------------------------------------------------------------------
+# Network megakernel: the whole L-layer RFNN in one fused sweep
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _network_planes(net, block_b, nb, interpret, coef_v, coef_u, gains,
+                    xer, xei, xor, xoi):
+    call = givens_mesh.network_pallas_call(
+        net.n, net.n_layers, net.n_columns, block_b, nb, interpret)
+    pv, pu = network_parity_arrays(net)
+    return tuple(call(coef_v, pv, coef_u, pu, gains, xer, xei, xor, xoi))
+
+
+def _network_planes_fwd(net, block_b, nb, interpret, coef_v, coef_u, gains,
+                        xer, xei, xor, xoi):
+    call = givens_mesh.network_fwd_pallas_call(
+        net.n, net.n_layers, net.n_columns, block_b, nb, interpret)
+    pv, pu = network_parity_arrays(net)
+    oe, oo, *stages = call(coef_v, pv, coef_u, pu, gains,
+                           xer, xei, xor, xoi)
+    # residuals: coefficients/gains + the network input + every layer's
+    # two pre-gain stage boundaries — everything inside a mesh is
+    # recomputed by the reversed inverse sweep
+    return (oe, oo), (coef_v, coef_u, gains, (xer, xei, xor, xoi),
+                      tuple(stages))
+
+
+def _network_planes_bwd(net, block_b, nb, interpret, res, cot):
+    coef_v, coef_u, gains, xplanes, stages = res
+    call = givens_mesh.network_bwd_pallas_call(
+        net.n, net.n_layers, net.n_columns, block_b, nb, interpret)
+    pv, pu = network_parity_arrays(net)
+    dcv, dcu, dg, dxer, dxei, dxor, dxoi = call(
+        givens_mesh.inverse_coefficients(coef_v),
+        givens_mesh.adjoint_coefficients(coef_v), pv,
+        givens_mesh.inverse_coefficients(coef_u),
+        givens_mesh.adjoint_coefficients(coef_u), pu,
+        gains, *xplanes, *stages, *cot)
+    return dcv, dcu, dg, dxer, dxei, dxor, dxoi
+
+
+_network_planes.defvjp(_network_planes_fwd, _network_planes_bwd)
+
+
+def _layer_gains(n: int, la: dict) -> Array:
+    """One layer's 12-row gain stack: g0 (input screens), g1 (attenuation +
+    folded mid screens), g2 (digital scale + output screen)."""
+    v_params, u_params = la["v"], la["u"]
+    g0 = jnp.ones((n,), jnp.complex64)
+    if v_params.get("alpha_in") is not None:
+        g0 = g0 * jnp.exp(-1j * v_params["alpha_in"].astype(jnp.complex64))
+    g1 = la["atten"].astype(jnp.complex64)
+    if v_params.get("alpha") is not None:
+        g1 = g1 * jnp.exp(-1j * v_params["alpha"].astype(jnp.complex64))
+    if u_params.get("alpha_in") is not None:
+        g1 = g1 * jnp.exp(-1j * u_params["alpha_in"].astype(jnp.complex64))
+    g2 = jnp.full((n,), jnp.asarray(la.get("scale", 1.0), jnp.complex64))
+    if u_params.get("alpha") is not None:
+        g2 = g2 * jnp.exp(-1j * u_params["alpha"].astype(jnp.complex64))
+    rows = []
+    for g in (g0, g1, g2):
+        rows += [jnp.real(g[0::2]), jnp.imag(g[0::2]),
+                 jnp.real(g[1::2]), jnp.imag(g[1::2])]
+    return jnp.stack(rows).astype(jnp.float32)  # [12, P]
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _pack_network_impl(net, hardware, layers):
+    """Stacked [L, C, 8, P] coefficients + [L, 12, P] gains for the
+    megakernel, identity-padded to the schedule's common column count."""
+    c = net.n_columns
+    coef_v, coef_u, gains = [], [], []
+    for (sv, su), la in zip(net.layers, layers):
+        coef_v.append(pad_columns(
+            _mesh_coefficients(sv, la["v"], hardware, la.get("key_v")), c))
+        coef_u.append(pad_columns(
+            _mesh_coefficients(su, la["u"], hardware, la.get("key_u")), c))
+        gains.append(_layer_gains(net.n, la))
+    return (jnp.stack(coef_v), jnp.stack(coef_u), jnp.stack(gains))
+
+
+#: VMEM working-set target for the fused network sweep (well under the
+#: ~16 MB/core budget: the backward also holds 2 coefficient tensors per
+#: mesh plus the gradient accumulators).
+_NETWORK_VMEM_TARGET = 4 * 1024 * 1024
+
+
+def _network_auto_block(b: int, block_b: int | None, n: int,
+                        n_layers: int) -> int:
+    """Pick the batch block for the megakernel.
+
+    ``None`` sizes the block so the resident planes — 8 stage-residual
+    planes per layer plus ~12 working planes — fit the VMEM target: small
+    networks get large blocks (fewer grid revisits of the coefficient
+    accumulators), deep/wide ones shrink toward the classic 128.
+    """
+    if block_b is None:
+        per_row = (8 * n_layers + 12) * (n // 2) * 4
+        block_b = max(8, min(1024, _NETWORK_VMEM_TARGET // per_row))
+    return _auto_block(b, block_b)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _rfnn_network_apply_impl(net, block_b, interpret, coef_v, coef_u, gains,
+                             x):
+    TRACE_COUNTS["rfnn_network"] += 1  # python side effect: trace time only
+    n = net.n
+    batch_shape = x.shape[:-1]
+    x2 = x.reshape((-1, n)).astype(jnp.complex64)
+    bb = _network_auto_block(x2.shape[0], block_b, n, net.n_layers)
+    x2, b_orig = _pad_batch(x2, bb)
+    nb = x2.shape[0] // bb
+    planes = ref.split_channels(x2)
+    oe, oo = _network_planes(net, bb, nb, interpret, coef_v, coef_u, gains,
+                             *planes)
+    out = jnp.stack([oe, oo], axis=-1).reshape((-1, n))[:b_orig]
+    return out.reshape(batch_shape + (n,))
+
+
+def _contains_tracer(tree) -> bool:
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree.leaves(tree))
+
+
+class _LeafIdCache:
+    """Small LRU keyed on (static key, id of every pytree leaf).
+
+    Holding strong references to the keyed leaves keeps their ids from
+    being recycled, so a hit is exact: same schedule, same (immutable)
+    parameter arrays -> same packed coefficients, with zero packing work.
+    Tracer leaves must bypass this cache (they are trace-local).
+    """
+
+    def __init__(self, maxsize: int = 8):
+        self._maxsize = maxsize
+        self._entries: dict[tuple, tuple] = {}  # key -> (leaves, value)
+
+    def get_or_build(self, static_key, tree, builder):
+        key = (static_key,) + tuple(id(l) for l in jax.tree.leaves(tree))
+        hit = self._entries.get(key)
+        if hit is not None:
+            return hit[1]
+        value = builder()
+        while len(self._entries) >= self._maxsize:
+            self._entries.pop(next(iter(self._entries)))
+        self._entries[key] = (jax.tree.leaves(tree), value)
+        return value
+
+    def clear(self):
+        self._entries.clear()
+
+
+_NETWORK_PACK_CACHE = _LeafIdCache(maxsize=8)
+
+_SHARED_LEAF_CACHES: dict = {}
+
+
+def memoize_by_leaf_ids(static_key, tree, builder):
+    """Leaf-identity memoization for derived-parameter pipelines.
+
+    Callers (e.g. ``AnalogSequence``) use this to keep *derived* arrays
+    (sigmoid'd attenuations, quantized phases, packed coefficients) stable
+    across eager calls with the same underlying parameters, which is what
+    lets the downstream pack cache hit.  Tracer leaves bypass (trace-local
+    values must never be cached); the per-static-key LRU is small and
+    holds strong leaf references so ids cannot be recycled.
+    """
+    if _contains_tracer(tree):
+        return builder()
+    cache = _SHARED_LEAF_CACHES.setdefault(static_key, _LeafIdCache())
+    return cache.get_or_build(static_key, tree, builder)
+
+
+def rfnn_network(layers, x: Array, *, n: int,
+                 plans=None,
+                 hardware: hw_lib.HardwareModel | None = None,
+                 block_b: int | None = None,
+                 interpret: bool | None = None) -> Array:
+    """The fused L-layer RFNN |.. |scale_l * U_l(D_l(V_l ..))| .. | sweep.
+
+    ``layers``: per-layer dicts with keys ``v``/``u`` (mesh params,
+    optional ``alpha_in``/``alpha`` screens), ``atten`` ([n] diagonal),
+    optional ``scale`` (digital gamma, default 1) and, with ``hardware``,
+    optional ``key_v``/``key_u`` phase-noise keys — the same split an
+    :class:`repro.core.analog_linear.AnalogLinear` layer consumes, so the
+    megakernel is draw-for-draw comparable with the per-layer paths.
+    ``plans``: per-layer ``(v_plan, u_plan)`` pairs (default Clements).
+
+    One ``pallas_call`` forward and one backward for the whole network:
+    inter-layer activations never leave VMEM, and the backward saves only
+    the layer-boundary magnitudes (DESIGN.md, "Network megakernel").
+
+    Packed coefficients are cached per (schedule, param identity): repeat
+    calls with the same (immutable) arrays — the serving steady state — do
+    zero packing work.  Tracers bypass the cache, so gradients flow
+    through packing exactly as in the per-layer path.  ``block_b=None``
+    sizes the batch block to the kernel's VMEM target (large blocks for
+    small networks, shrinking with n and L).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    layers = tuple(layers)
+    net = network_schedule(n, len(layers), plans)
+    KERNEL_PATH_CALLS["rfnn_network"] += 1
+
+    def build():
+        PACK_EVENTS["rfnn_network"] += 1
+        return _pack_network_impl(net, hardware, layers)
+
+    if _contains_tracer(layers):
+        packed = build()
+    else:
+        packed = _NETWORK_PACK_CACHE.get_or_build(
+            (net, hardware), layers, build)
+    return _rfnn_network_apply_impl(net, block_b, interpret, *packed, x)

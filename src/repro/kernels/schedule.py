@@ -27,6 +27,7 @@ kernels' ``[C', 8, P]`` coefficient layout.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -63,21 +64,16 @@ class MeshSchedule:
         return self.n // 2
 
 
-# Bounded: dynamically synthesized Reck programs mint a fresh plan per
+# Bounded memoization (plans hash by content, see MeshPlan.__hash__):
+# dynamically synthesized Reck programs mint a fresh plan object per
 # reprogramming, and each distinct schedule is also a distinct jit static —
-# evicting oldest keeps a long-lived sweep over many target matrices from
-# accumulating schedules without bound.
-_SCHEDULE_CACHE: dict[tuple, MeshSchedule] = {}
-_SCHEDULE_CACHE_MAX = 128
-
-
+# returning the *same* MeshSchedule for equal plans keeps repeated
+# ``mesh_apply(plan=...)`` calls from rebuilding parity tensors or
+# re-triggering jit trace-cache misses, while the LRU bound keeps a
+# long-lived sweep over many target matrices from accumulating schedules.
+@functools.lru_cache(maxsize=128)
 def schedule_from_plan(plan: mesh_lib.MeshPlan) -> MeshSchedule:
     """Re-schedule an arbitrary MeshPlan into kernel parity columns."""
-    key = (plan.n, plan.top.tobytes(), plan.active.tobytes())
-    hit = _SCHEDULE_CACHE.get(key)
-    if hit is not None:
-        return hit
-
     pk = plan.n // 2
     parity: list[int] = []
     source: list[tuple[int, ...]] = []
@@ -99,11 +95,7 @@ def schedule_from_plan(plan: mesh_lib.MeshPlan) -> MeshSchedule:
     if not parity:  # cell-free mesh: one identity column keeps shapes valid
         parity = [0]
         source = [tuple([-1] * pk)]
-    sched = MeshSchedule(n=plan.n, parity=tuple(parity), source=tuple(source))
-    while len(_SCHEDULE_CACHE) >= _SCHEDULE_CACHE_MAX:
-        _SCHEDULE_CACHE.pop(next(iter(_SCHEDULE_CACHE)))
-    _SCHEDULE_CACHE[key] = sched
-    return sched
+    return MeshSchedule(n=plan.n, parity=tuple(parity), source=tuple(source))
 
 
 def clements_schedule(n: int) -> MeshSchedule:
@@ -111,9 +103,25 @@ def clements_schedule(n: int) -> MeshSchedule:
     return schedule_from_plan(mesh_lib.clements_plan(n))
 
 
+@functools.lru_cache(maxsize=256)
+def _parity_np(sched: MeshSchedule) -> np.ndarray:
+    # cache the *numpy* array: jnp conversion must happen per trace (a
+    # jnp constant built inside a jit trace is a trace-local tracer)
+    return np.asarray(sched.parity, np.int32).reshape(-1, 1)
+
+
 def parity_array(sched: MeshSchedule) -> Array:
     """The per-column parity as the kernels' ``[C', 1]`` int32 input."""
-    return jnp.asarray(sched.parity, jnp.int32).reshape(-1, 1)
+    return jnp.asarray(_parity_np(sched))
+
+
+@functools.lru_cache(maxsize=256)
+def _pack_indices(sched: MeshSchedule, c: int, p: int) -> np.ndarray:
+    """Memoized gather map for :func:`pack_cells` (host work per schedule,
+    not per call/trace): flat plan-cell index per kernel slot, with -1
+    redirected to the appended identity cell at ``c * p``."""
+    idx = np.asarray(sched.source, np.int64)
+    return np.where(idx < 0, c * p, idx)
 
 
 def pack_cells(sched: MeshSchedule, t_all: Array) -> Array:
@@ -141,8 +149,7 @@ def pack_cells(sched: MeshSchedule, t_all: Array) -> Array:
     eye = jnp.broadcast_to(jnp.eye(2, dtype=jnp.complex64),
                            lead + (1, 2, 2))
     flat = jnp.concatenate([flat, eye], axis=-3)
-    idx = np.asarray(sched.source, np.int64)
-    idx = np.where(idx < 0, c * p, idx)  # -1 -> the appended identity
+    idx = _pack_indices(sched, c, p)  # -1 -> the appended identity
     cells = jnp.take(flat, jnp.asarray(idx), axis=-3)  # [..., C', P, 2, 2]
     coef = jnp.stack(
         [jnp.real(cells[..., 0, 0]), jnp.imag(cells[..., 0, 0]),
@@ -152,3 +159,114 @@ def pack_cells(sched: MeshSchedule, t_all: Array) -> Array:
         axis=-2,
     )  # [..., C', 8, P]
     return coef.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Network schedules: a stack of per-layer (V, U) schedules for the megakernel
+# ---------------------------------------------------------------------------
+
+#: Coefficient rows of an identity 2x2 cell (t00 = t11 = 1): the padding
+#: column appended to short layers so every layer shares one column count.
+_IDENTITY_ROWS = (1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSchedule:
+    """Static schedule of an L-layer RFNN for the fused network kernel.
+
+    Each layer is a ``(V, U)`` pair of :class:`MeshSchedule`\\ s over the
+    same channel count; the kernel runs all layers in one VMEM residency
+    with coefficient/parity tensors stacked to ``[L, C, 8, P]`` /
+    ``[L, C, 1]``, where ``C = n_columns`` is the max column count over
+    every mesh (shorter meshes are padded with identity columns, which the
+    sweep applies as exact no-ops).  Hashable and purely static, so it is
+    a jit/static and ``custom_vjp`` nondiff argument like
+    :class:`MeshSchedule`.
+    """
+
+    layers: tuple[tuple[MeshSchedule, MeshSchedule], ...]
+
+    def __post_init__(self):
+        if not self.layers:
+            raise ValueError("network schedule needs at least one layer")
+        n = self.layers[0][0].n
+        for sv, su in self.layers:
+            if sv.n != n or su.n != n:
+                raise ValueError(
+                    f"all layer meshes must share n={n}, got "
+                    f"{[(sv.n, su.n) for sv, su in self.layers]}")
+
+    @property
+    def n(self) -> int:
+        return self.layers[0][0].n
+
+    @property
+    def pairs(self) -> int:
+        return self.n // 2
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def n_columns(self) -> int:
+        return max(max(sv.n_columns, su.n_columns) for sv, su in self.layers)
+
+
+def network_schedule(n: int, depth: int,
+                     plans=None) -> NetworkSchedule:
+    """Build a NetworkSchedule for ``depth`` layers of n-channel meshes.
+
+    ``plans``: optional per-layer ``(v_plan, u_plan)`` pairs (``None``
+    entries fall back to the Clements rectangle); ``None`` uses Clements
+    everywhere — the trainable default.
+    """
+    if plans is None:
+        plans = ((None, None),) * depth
+    if len(plans) != depth:
+        raise ValueError(f"{len(plans)} plan pairs for depth {depth}")
+    layers = []
+    for v_plan, u_plan in plans:
+        sv = (clements_schedule(n) if v_plan is None
+              else schedule_from_plan(v_plan))
+        su = (clements_schedule(n) if u_plan is None
+              else schedule_from_plan(u_plan))
+        layers.append((sv, su))
+    return NetworkSchedule(layers=tuple(layers))
+
+
+@functools.lru_cache(maxsize=64)
+def _network_parity_np(net: NetworkSchedule) -> tuple[np.ndarray, np.ndarray]:
+    c = net.n_columns
+    pv = np.zeros((net.n_layers, c, 1), np.int32)
+    pu = np.zeros((net.n_layers, c, 1), np.int32)
+    for l, (sv, su) in enumerate(net.layers):
+        pv[l, : sv.n_columns, 0] = sv.parity
+        pu[l, : su.n_columns, 0] = su.parity
+    return pv, pu
+
+
+def network_parity_arrays(net: NetworkSchedule) -> tuple[Array, Array]:
+    """Stacked ``[L, C, 1]`` int32 parity inputs for the V and U meshes.
+
+    Identity-padded columns get parity 0 (the padding coefficient is the
+    identity cell, so the pairing is irrelevant).  The host-side build is
+    memoized per schedule (numpy, so nothing trace-local is cached):
+    steady-state steps rebuild nothing host-side.
+    """
+    pv, pu = _network_parity_np(net)
+    return jnp.asarray(pv), jnp.asarray(pu)
+
+
+def pad_columns(coef: Array, n_columns: int) -> Array:
+    """Pad ``[..., C, 8, P]`` coefficients to ``n_columns`` with identity
+    cells (exact no-op columns in the sweep)."""
+    c = coef.shape[-3]
+    if c > n_columns:
+        raise ValueError(f"coefficients have {c} columns > pad {n_columns}")
+    if c == n_columns:
+        return coef
+    p = coef.shape[-1]
+    rows = jnp.asarray(_IDENTITY_ROWS, coef.dtype)[:, None]  # [8, 1]
+    ident = jnp.broadcast_to(rows, coef.shape[:-3] + (n_columns - c, 8, p))
+    return jnp.concatenate([coef, ident], axis=-3)

@@ -21,12 +21,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.analog_linear import AnalogUnitary
+from repro.core.analog_linear import AnalogSequence, AnalogUnitary
 from repro.core.hardware import HardwareModel
 from repro.paper.prototype import PROTOTYPE
 
@@ -38,17 +39,29 @@ class MnistRFNN:
     quantize: str | None = "table1"
     d_hidden: int = 8
     n_classes: int = 10
-    #: "pallas" runs the 8x8 mesh (fwd + bwd) through the fused kernels,
-    #: with or without the hardware-imperfection model: non-ideal cell
-    #: coefficients ride in the same VMEM-resident sweep, so the paper's
-    #: hardware-in-the-loop training (and its DSPSA refinement bursts) is
-    #: a kernel workload end-to-end.
+    #: depth of the analog section.  1 (the default) is the paper's Fig. 14
+    #: network — a single 8x8 mesh between the digital layers.  >1 stacks
+    #: full analog linear layers (V-mesh -> D -> U-mesh -> |detect|) into
+    #: the Sec.-V multi-layer microwave ANN; with ``backend="pallas"`` the
+    #: whole stack runs as one fused network megakernel per direction.
+    analog_depth: int = 1
+    #: "pallas" runs the analog section (fwd + bwd) through the fused
+    #: kernels, with or without the hardware-imperfection model: non-ideal
+    #: cell coefficients ride in the same VMEM-resident sweep, so the
+    #: paper's hardware-in-the-loop training (and its DSPSA refinement
+    #: bursts) is a kernel workload end-to-end.
     backend: str = "reference"
 
     def __post_init__(self):
-        mesh = AnalogUnitary(n=self.d_hidden, quantize=self.quantize,
-                             hardware=self.hardware, output="abs",
-                             backend=self.backend)
+        if self.analog_depth > 1:
+            mesh = AnalogSequence(n=self.d_hidden, depth=self.analog_depth,
+                                  quantize=self.quantize,
+                                  hardware=self.hardware, output="abs",
+                                  backend=self.backend)
+        else:
+            mesh = AnalogUnitary(n=self.d_hidden, quantize=self.quantize,
+                                 hardware=self.hardware, output="abs",
+                                 backend=self.backend)
         object.__setattr__(self, "mesh", mesh)
 
     def init(self, key):
@@ -85,7 +98,7 @@ class MnistRFNN:
 def train_mnist(x_tr, y_tr, x_te, y_te, *, analog=True, hardware=PROTOTYPE,
                 quantize="table1", epochs=100, batch=10, lr=0.005, seed=0,
                 log_every=20, noisy_train=False, schedule="algorithm1",
-                backend="reference"):
+                backend="reference", analog_depth=1):
     """Paper hyperparameters: minibatch 10, lr 0.005, 100 epochs, shuffled.
 
     schedule:
@@ -98,7 +111,18 @@ def train_mnist(x_tr, y_tr, x_te, y_te, *, analog=True, hardware=PROTOTYPE,
                      "update physical parameters on the physical device"
                      loop of Fig. 11, with DSPSA refinement available via
                      repro.core.dspsa).
+
+    ``analog_depth > 1`` stacks the analog section into the Sec.-V
+    multi-layer network (see :class:`MnistRFNN`); the DSPSA device-code
+    refinement of Algorithm I addresses the single-mesh phase codes, so
+    deep stacks train with the straight-through schedule instead.
     """
+    if analog_depth > 1 and schedule == "algorithm1":
+        warnings.warn(
+            "analog_depth > 1 does not support schedule='algorithm1' (the "
+            "DSPSA refinement addresses single-mesh phase codes); falling "
+            "back to the straight-through schedule", stacklevel=2)
+        schedule = "ste"
     if analog and quantize and schedule == "algorithm1":
         # stage 1: continuous phases, hardware-in-the-loop
         stage1 = train_mnist(x_tr, y_tr, x_te, y_te, analog=True,
@@ -135,7 +159,8 @@ def train_mnist(x_tr, y_tr, x_te, y_te, *, analog=True, hardware=PROTOTYPE,
         return res
 
     model = MnistRFNN(analog=analog, hardware=hardware if analog else None,
-                      quantize=quantize, backend=backend)
+                      quantize=quantize, backend=backend,
+                      analog_depth=analog_depth)
     params = model.init(jax.random.PRNGKey(seed))
     return _train_loop(model, params, x_tr, y_tr, x_te, y_te, epochs=epochs,
                        batch=batch, lr=lr, seed=seed, log_every=log_every,

@@ -4,12 +4,14 @@ from repro.parallel.sharding import (
     ShardingRules,
     active_mesh,
     constrain,
+    data_parallel,
     logical_spec,
     set_rules,
+    shard_map_compat,
     use_mesh_and_rules,
 )
 
 __all__ = [
-    "ShardingRules", "active_mesh", "constrain", "logical_spec",
-    "set_rules", "use_mesh_and_rules",
+    "ShardingRules", "active_mesh", "constrain", "data_parallel",
+    "logical_spec", "set_rules", "shard_map_compat", "use_mesh_and_rules",
 ]

@@ -14,21 +14,15 @@ group on its current microbatch, then activations rotate one stage down.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map_compat as _shard_map
+
 Array = jax.Array
-
-if getattr(jax, "shard_map", None) is not None:  # jax >= 0.6 top-level API
-    _shard_map = functools.partial(jax.shard_map, check_vma=False)
-else:  # the experimental location (and arg name) of older releases
-    from jax.experimental.shard_map import shard_map as _shard_map_experimental
-
-    _shard_map = functools.partial(_shard_map_experimental, check_rep=False)
 
 
 def pipeline_forward(block_fn: Callable, mesh: Mesh, axis: str,

@@ -22,10 +22,22 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import threading
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# shard_map moved (and renamed its replication-check kwarg) across jax
+# releases; every shard_map user in the repo goes through this shim.
+if getattr(jax, "shard_map", None) is not None:  # jax >= 0.6 top-level API
+    shard_map_compat = functools.partial(jax.shard_map, check_vma=False)
+else:  # the experimental location (and arg name) of older releases
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    shard_map_compat = functools.partial(_shard_map_experimental,
+                                         check_rep=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,3 +143,36 @@ def constrain(x: jax.Array, *names: str | None) -> jax.Array:
 
 def named_sharding(mesh: Mesh, rules: ShardingRules, *names) -> NamedSharding:
     return NamedSharding(mesh, rules.spec(*names))
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel wrapper over the batch grid
+# ---------------------------------------------------------------------------
+
+def data_parallel(apply_fn, mesh: Mesh, *, axis_name: str = "data"):
+    """Shard-map a batched ``apply_fn(params, x)`` over ``mesh[axis_name]``.
+
+    Parameters are replicated; ``x`` is split on its leading (batch) axis;
+    each device runs the *same* program — e.g. the fused RFNN network
+    megakernel — on its batch shard, and outputs are re-concatenated along
+    the batch axis.  Ragged batches are zero-padded up to a multiple of the
+    axis size and sliced back, so any request count works (serving ticks
+    don't have to align with the device count).
+    """
+    n_dev = mesh.shape[axis_name]
+    # jit the shard_map: without it every call re-traces the body, and
+    # trace-time tracers defeat the megakernel's coefficient-pack cache —
+    # steady-state serving ticks must stay zero-packing-work when sharded
+    fn = jax.jit(shard_map_compat(apply_fn, mesh=mesh,
+                                  in_specs=(P(), P(axis_name)),
+                                  out_specs=P(axis_name)))
+
+    def call(params, x):
+        b = x.shape[0]
+        pad = (-b) % n_dev
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+        return fn(params, x)[:b]
+
+    return call

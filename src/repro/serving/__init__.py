@@ -1,5 +1,12 @@
-"""Serving runtime: continuous batching over the prefill/decode steps."""
+"""Serving runtime: continuous batching over the prefill/decode steps,
+plus fixed-slot analog-network ticks through the fused megakernel."""
 
-from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.batcher import (
+    AnalogRequest,
+    AnalogTickBatcher,
+    ContinuousBatcher,
+    Request,
+)
 
-__all__ = ["ContinuousBatcher", "Request"]
+__all__ = ["AnalogRequest", "AnalogTickBatcher", "ContinuousBatcher",
+           "Request"]

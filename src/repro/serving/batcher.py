@@ -127,3 +127,75 @@ class ContinuousBatcher:
             if n == 0 and not self.queue:
                 return
         raise RuntimeError("batcher did not drain")
+
+
+# ---------------------------------------------------------------------------
+# Analog (RFNN) serving: stateless fixed-batch ticks through the megakernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AnalogRequest:
+    """One feature vector awaiting an analog-network forward."""
+
+    rid: int
+    features: np.ndarray        # [d] float
+    result: np.ndarray | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class AnalogTickBatcher:
+    """Multiplexes analog-inference requests onto fixed-shape engine ticks.
+
+    The analog network is stateless (no KV cache), so serving reduces to:
+    collect up to ``slots`` pending requests, run **one** forward over the
+    fixed ``[slots, d]`` panel, scatter results back.  With an
+    ``AnalogSequence(backend="pallas")`` model each tick is a single fused
+    network-megakernel ``pallas_call``, and the model's coefficient-pack
+    cache means steady-state ticks do zero packing work (the model's
+    params never change between ticks).  Unfilled slots ride as zero rows
+    — exactly the kernels' ragged-batch padding semantics.
+
+    ``mesh``: optional ``jax.sharding.Mesh`` — ticks are then sharded over
+    the batch grid via :func:`repro.parallel.sharding.data_parallel`, the
+    same megakernel running per-device.
+    """
+
+    def __init__(self, model, params, *, slots: int, mesh=None,
+                 data_axis: str = "data"):
+        self.model = model
+        self.params = params
+        self.n_slots = slots
+        self.queue: list[AnalogRequest] = []
+        self._apply = lambda p, x: model.apply(p, x)
+        if mesh is not None:
+            from repro.parallel.sharding import data_parallel
+
+            self._apply = data_parallel(self._apply, mesh,
+                                        axis_name=data_axis)
+
+    def submit(self, req: AnalogRequest):
+        self.queue.append(req)
+
+    def tick(self) -> int:
+        """Serve one engine tick; returns the number of requests served."""
+        if not self.queue:
+            return 0
+        active, self.queue = (self.queue[: self.n_slots],
+                              self.queue[self.n_slots:])
+        panel = np.zeros((self.n_slots, len(active[0].features)), np.float32)
+        for i, req in enumerate(active):
+            panel[i] = req.features
+        out = np.asarray(self._apply(self.params, jnp.asarray(panel)))
+        for i, req in enumerate(active):
+            req.result = out[i]
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000):
+        """Drain the queue; returns when every submitted request is done."""
+        for _ in range(max_ticks):
+            if self.tick() == 0 and not self.queue:
+                return
+        raise RuntimeError("analog batcher did not drain")

@@ -46,24 +46,55 @@ def state_specs(model: Model, optimizer: AdamW):
     return TrainState(params=pspecs, opt=optimizer.state_specs(pspecs))
 
 
-def make_sgd_step(loss_fn, lr: float, freeze: tuple[str, ...] = ()):
+def make_sgd_step(loss_fn, lr: float, freeze: tuple[str, ...] = (),
+                  mesh=None, data_axis: str = "data",
+                  replicated_args: tuple[int, ...] = ()):
     """Plain minibatch-SGD step: ``step(params, *batch) -> (params, (loss, aux))``.
 
     ``loss_fn(params, *batch) -> (loss, aux)``; top-level param groups named
     in ``freeze`` get zeroed gradients (the paper's stage-2 "deployed
     device" training where the programmed mesh codes are held fixed).
+
+    With ``mesh``, the step is data-parallel over ``mesh[data_axis]``: each
+    device computes gradients on its batch shard (through whatever backend
+    the model selects — the fused Pallas megakernels run per-shard), loss
+    and gradients are ``pmean``-reduced, and the (replicated) update is
+    applied in-shard — so the returned params stay identical on every
+    device.  Batch args whose leading axis is *not* the batch (PRNG keys,
+    scalars) are named in ``replicated_args`` by position.  The sharded
+    batch axis must divide by the axis size.
     """
 
-    def sgd_step(params, *batch):
+    def _apply(params, *batch, reduce_axis=None):
         (loss, aux), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, *batch)
+        if reduce_axis is not None:
+            loss = jax.lax.pmean(loss, reduce_axis)
+            aux = jax.lax.pmean(aux, reduce_axis)
+            grads = jax.lax.pmean(grads, reduce_axis)
         if freeze:
             grads = {k: (jax.tree.map(jnp.zeros_like, v) if k in freeze else v)
                      for k, v in grads.items()}
         params = jax.tree.map(lambda w, g: w - lr * g, params, grads)
         return params, (loss, aux)
 
-    return sgd_step
+    if mesh is None:
+        return _apply
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import shard_map_compat
+
+    def dp_step(params, *batch):
+        specs = tuple(P() if i in replicated_args else P(data_axis)
+                      for i in range(len(batch)))
+        fn = shard_map_compat(
+            lambda p, *b: _apply(p, *b, reduce_axis=data_axis),
+            mesh=mesh, in_specs=(P(),) + specs,
+            out_specs=(P(), (P(), P())))
+        return fn(params, *batch)
+
+    return dp_step
 
 
 def make_train_step(model: Model, optimizer: AdamW, accum_steps: int = 1):

@@ -1,0 +1,287 @@
+"""Network-megakernel validation: the fused L-layer sweep vs the
+per-layer kernel composition (differential), ragged batches, schedule
+memoization, and the coefficient-pack cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decompose, mesh as mesh_lib
+from repro.core.analog_linear import AnalogSequence
+from repro.core.hardware import HardwareModel
+from repro.kernels import ops
+from repro.kernels.schedule import network_schedule
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _make_layers(n, depth, *, seed=0, screens=False):
+    plan = mesh_lib.clements_plan(n)
+    layers = []
+    for l in range(depth):
+        kv, ku, ka, ks = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(seed), l), 4)
+        vp = mesh_lib.init_mesh_params(kv, plan)
+        up = mesh_lib.init_mesh_params(ku, plan)
+        if screens:
+            vp["alpha_in"] = jax.random.uniform(ks, (n,)) * 2 * np.pi
+            up["alpha_in"] = jax.random.uniform(
+                jax.random.fold_in(ks, 1), (n,)) * 2 * np.pi
+        layers.append({
+            "v": vp, "u": up,
+            "atten": jax.random.uniform(ka, (n,), minval=0.2, maxval=0.9),
+            "scale": 1.0 + 0.1 * l,
+        })
+    return tuple(layers)
+
+
+def _per_layer(layers, x, n, *, plans=None, hardware=None):
+    h = x
+    for i, la in enumerate(layers):
+        vp, up = (plans[i] if plans is not None else (None, None))
+        h = ops.rfnn_linear(la["v"], la["atten"], la["u"], h, n=n,
+                            scale=la["scale"], v_plan=vp, u_plan=up,
+                            hardware=hardware,
+                            key_v=la.get("key_v"), key_u=la.get("key_u"))
+    return h
+
+
+def _rand_x(n, batch, seed=0, complex_=True):
+    k = jax.random.PRNGKey(seed)
+    xr = jax.random.normal(k, (batch, n))
+    if not complex_:
+        return xr
+    xi = jax.random.normal(jax.random.fold_in(k, 1), (batch, n))
+    return (xr + 1j * xi).astype(jnp.complex64)
+
+
+def _max_rel_err(got, want):
+    scale = max(float(jnp.max(jnp.abs(g))) for g in jax.tree.leaves(want))
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)))
+    return err / (scale + 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# differential: megakernel vs per-layer composition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,depth", [(4, 1), (8, 3), (16, 4)])
+def test_network_forward_matches_per_layer(n, depth):
+    layers = _make_layers(n, depth, screens=True)
+    x = _rand_x(n, 9)
+    y_pl = _per_layer(layers, x, n)
+    y_net = ops.rfnn_network(layers, x, n=n)
+    np.testing.assert_allclose(np.asarray(y_net), np.asarray(y_pl),
+                               atol=1e-5 * n)
+
+
+def test_network_grads_match_per_layer():
+    """The acceptance bar: megakernel grads == per-layer path ≤1e-5 rel."""
+    n, depth = 16, 4
+    layers = _make_layers(n, depth, screens=True)
+    x = _rand_x(n, 32)
+    w = 1.0 + jnp.arange(n, dtype=jnp.float32)  # break |.|-degeneracies
+
+    def loss_net(ls, xx):
+        return jnp.sum(ops.rfnn_network(ls, xx, n=n) * w)
+
+    def loss_pl(ls, xx):
+        return jnp.sum(_per_layer(ls, xx, n) * w)
+
+    g_net = jax.jit(jax.grad(loss_net, argnums=(0, 1)))(layers, x)
+    g_pl = jax.jit(jax.grad(loss_pl, argnums=(0, 1)))(layers, x)
+    assert _max_rel_err(g_net, g_pl) <= 1e-5
+
+
+def test_network_mixed_plans_identity_padding():
+    """Reck programs are deeper than Clements: stacking both exercises the
+    identity-column padding, which must be an exact no-op."""
+    n = 8
+    rplan, rparams = decompose.reck_program(
+        decompose.random_unitary(n, seed=3))
+    layers = list(_make_layers(n, 2, seed=5))
+    layers[0] = dict(layers[0], v=dict(rparams))
+    layers = tuple(layers)
+    plans = ((rplan, None), (None, None))
+    x = _rand_x(n, 7)
+    y_pl = _per_layer(layers, x, n, plans=plans)
+    y_net = ops.rfnn_network(layers, x, n=n, plans=plans)
+    np.testing.assert_allclose(np.asarray(y_net), np.asarray(y_pl),
+                               atol=1e-4)
+    net = network_schedule(n, 2, plans)
+    assert net.n_columns > net.layers[1][0].n_columns  # padding actually used
+
+
+def test_network_hardware_draw_parity():
+    """Non-ideal cells + phase-noise keys: megakernel and per-layer paths
+    must consume keys identically (draw-for-draw agreement)."""
+    n, depth = 8, 2
+    hw = HardwareModel()
+    base = _make_layers(n, depth, seed=2)
+    key = jax.random.PRNGKey(11)
+    layers = []
+    for l, la in enumerate(base):
+        kv, ku = jax.random.split(jax.random.fold_in(key, l))
+        layers.append(dict(la, key_v=kv, key_u=ku))
+    layers = tuple(layers)
+    x = _rand_x(n, 6)
+    y_pl = _per_layer(layers, x, n, hardware=hw)
+    y_net = ops.rfnn_network(layers, x, n=n, hardware=hw)
+    np.testing.assert_allclose(np.asarray(y_net), np.asarray(y_pl),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ragged batches
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", [1, 7, 130])
+def test_network_ragged_batches(batch):
+    """B need not divide the batch block: the tail block is zero-padded and
+    masked in forward and VJP."""
+    n, depth = 8, 2
+    layers = _make_layers(n, depth)
+    x = _rand_x(n, batch)
+    y_pl = _per_layer(layers, x, n)
+    y_net = ops.rfnn_network(layers, x, n=n, block_b=64)
+    assert y_net.shape == (batch, n)
+    np.testing.assert_allclose(np.asarray(y_net), np.asarray(y_pl),
+                               atol=1e-5)
+
+    w = 1.0 + jnp.arange(n, dtype=jnp.float32)
+    g_net = jax.grad(lambda ls: jnp.sum(
+        ops.rfnn_network(ls, x, n=n, block_b=64) * w))(layers)
+    g_pl = jax.grad(lambda ls: jnp.sum(_per_layer(ls, x, n) * w))(layers)
+    assert _max_rel_err(g_net, g_pl) <= 1e-5
+
+
+@pytest.mark.parametrize("batch", [1, 7, 130])
+def test_mesh_apply_ragged_batches(batch):
+    """The single-mesh kernel path under the same ragged sizes."""
+    from repro.kernels import ref
+
+    n = 8
+    plan = mesh_lib.clements_plan(n)
+    params = mesh_lib.init_mesh_params(jax.random.PRNGKey(0), plan)
+    x = _rand_x(n, batch)
+    y = ops.mesh_apply(params, x, n=n, block_b=64)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.mesh_apply_ref(params, x, n)),
+                               atol=1e-4)
+    g_k = jax.grad(lambda p: jnp.sum(jnp.abs(
+        ops.mesh_apply(p, x, n=n, block_b=64))))(params)
+    g_r = jax.grad(lambda p: jnp.sum(jnp.abs(
+        ref.mesh_apply_ref(p, x, n))))(params)
+    assert _max_rel_err(g_k, g_r) <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# memoization: schedule lowering + trace cache + pack cache
+# ---------------------------------------------------------------------------
+
+def test_schedule_lowering_memoized_no_retrace():
+    """Structurally equal plans (fresh objects) must reuse the same
+    MeshSchedule and must NOT re-trigger a jit trace."""
+    from repro.kernels.schedule import schedule_from_plan
+
+    n = 8
+    p1 = mesh_lib.clements_plan(n)
+    p2 = mesh_lib._make_plan(n, p1.top.copy(), p1.active.copy())
+    assert p2 is not p1 and p2 == p1
+    assert schedule_from_plan(p1) is schedule_from_plan(p2)
+
+    params = mesh_lib.init_mesh_params(jax.random.PRNGKey(0), p1)
+    x = _rand_x(n, 4)
+    ops.mesh_apply(params, x, n=n, plan=p1)
+    before = ops.TRACE_COUNTS["mesh_apply"]
+    ops.mesh_apply(params, x, n=n, plan=p2)
+    assert ops.TRACE_COUNTS["mesh_apply"] == before  # no retrace
+
+
+def test_network_schedule_memoized_no_retrace():
+    n, depth = 8, 2
+    layers = _make_layers(n, depth)
+    x = _rand_x(n, 4)
+    ops.rfnn_network(layers, x, n=n)
+    before = ops.TRACE_COUNTS["rfnn_network"]
+    ops.rfnn_network(layers, x, n=n)  # fresh schedule build, equal plans
+    assert ops.TRACE_COUNTS["rfnn_network"] == before
+
+
+def test_pack_cache_steady_state_zero_packing():
+    """Same (immutable) params -> cached packed coefficients; new arrays
+    -> exactly one new pack."""
+    n, depth = 8, 2
+    layers = _make_layers(n, depth, seed=7)
+    x = _rand_x(n, 4)
+    ops.rfnn_network(layers, x, n=n)  # populate
+    before = ops.PACK_EVENTS["rfnn_network"]
+    for _ in range(5):
+        ops.rfnn_network(layers, x, n=n)
+    assert ops.PACK_EVENTS["rfnn_network"] == before  # steady state
+
+    bumped = (dict(layers[0], atten=layers[0]["atten"] + 0.01),) + layers[1:]
+    ops.rfnn_network(bumped, x, n=n)
+    assert ops.PACK_EVENTS["rfnn_network"] == before + 1
+
+
+# ---------------------------------------------------------------------------
+# AnalogSequence: backend equivalence end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantize", [None, "table1"])
+def test_analog_sequence_backends_match(quantize):
+    n, depth = 8, 3
+    ref_m = AnalogSequence(n=n, depth=depth, quantize=quantize,
+                           backend="reference")
+    pal_m = AnalogSequence(n=n, depth=depth, quantize=quantize,
+                           backend="pallas")
+    params = ref_m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, n))
+    np.testing.assert_allclose(np.asarray(pal_m.apply(params, x)),
+                               np.asarray(ref_m.apply(params, x)),
+                               atol=1e-5)
+    w = 1.0 + jnp.arange(n, dtype=jnp.float32)
+    g_r = jax.grad(lambda p: jnp.sum(ref_m.apply(p, x) * w))(params)
+    g_p = jax.grad(lambda p: jnp.sum(pal_m.apply(p, x) * w))(params)
+    assert _max_rel_err(g_p, g_r) <= 1e-5
+
+
+def test_analog_sequence_hardware_key_parity():
+    """Phase-noise draws must agree backend-for-backend under one key."""
+    n, depth = 8, 2
+    hw = HardwareModel(detector_sigma=0.0)
+    ref_m = AnalogSequence(n=n, depth=depth, hardware=hw,
+                           backend="reference")
+    pal_m = AnalogSequence(n=n, depth=depth, hardware=hw, backend="pallas")
+    params = ref_m.init(jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, n))
+    key = jax.random.PRNGKey(42)
+    np.testing.assert_allclose(
+        np.asarray(pal_m.apply(params, x, key=key)),
+        np.asarray(ref_m.apply(params, x, key=key)), atol=1e-5)
+    # different keys must give different draws (noise actually applied)
+    y1 = pal_m.apply(params, x, key=key)
+    y2 = pal_m.apply(params, x, key=jax.random.PRNGKey(43))
+    assert float(jnp.max(jnp.abs(y1 - y2))) > 1e-6
+
+
+def test_mnist_rfnn_analog_depth_backends_match():
+    from repro.paper.mnist_rfnn import MnistRFNN
+
+    xs = jax.random.normal(jax.random.PRNGKey(1), (6, 784))
+    ys = jnp.asarray([0, 1, 2, 3, 4, 5])
+    m_ref = MnistRFNN(analog=True, hardware=None, quantize=None,
+                      analog_depth=2, backend="reference")
+    m_pal = MnistRFNN(analog=True, hardware=None, quantize=None,
+                      analog_depth=2, backend="pallas")
+    params = m_ref.init(jax.random.PRNGKey(0))
+    l_ref, _ = m_ref.loss(params, xs, ys)
+    l_pal, _ = m_pal.loss(params, xs, ys)
+    assert abs(float(l_ref) - float(l_pal)) < 1e-5
+
+    g_ref = jax.grad(lambda p: m_ref.loss(p, xs, ys)[0])(params)
+    g_pal = jax.grad(lambda p: m_pal.loss(p, xs, ys)[0])(params)
+    assert _max_rel_err(g_pal, g_ref) <= 1e-4

@@ -6,7 +6,12 @@ import pytest
 
 from repro import configs
 from repro.models import Model
-from repro.serving import ContinuousBatcher, Request
+from repro.serving import (
+    AnalogRequest,
+    AnalogTickBatcher,
+    ContinuousBatcher,
+    Request,
+)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -74,3 +79,69 @@ def test_batcher_eos_stops_generation(engine):
     b2.submit(req2)
     b2.run()
     assert req2.done and len(req2.output) == 1  # stopped at eos
+
+
+# ---------------------------------------------------------------------------
+# analog tick batcher: fixed-slot serving through the network megakernel
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def analog_engine():
+    from repro.core.analog_linear import AnalogSequence
+
+    n, depth = 8, 2
+    ref_m = AnalogSequence(n=n, depth=depth, backend="reference")
+    pal_m = AnalogSequence(n=n, depth=depth, backend="pallas")
+    params = ref_m.init(jax.random.PRNGKey(0))
+    return n, ref_m, pal_m, params
+
+
+def _analog_reqs(n, count, seed=0):
+    rng = np.random.default_rng(seed)
+    return [AnalogRequest(rid=i,
+                          features=rng.normal(size=n).astype(np.float32))
+            for i in range(count)]
+
+
+def test_analog_batcher_pallas_matches_reference(analog_engine):
+    """Tick-loop smoke: pallas ticks == reference ticks, and the kernel
+    path is actually taken (KERNEL_PATH_CALLS increments)."""
+    from repro.kernels import ops
+
+    n, ref_m, pal_m, params = analog_engine
+    reqs_r = _analog_reqs(n, 7)
+    reqs_p = _analog_reqs(n, 7)
+    b_ref = AnalogTickBatcher(ref_m, params, slots=3)
+    b_pal = AnalogTickBatcher(pal_m, params, slots=3)
+    for r in reqs_r:
+        b_ref.submit(r)
+    for r in reqs_p:
+        b_pal.submit(r)
+    calls_before = ops.KERNEL_PATH_CALLS["rfnn_network"]
+    b_ref.run()
+    b_pal.run()
+    assert ops.KERNEL_PATH_CALLS["rfnn_network"] > calls_before
+    assert all(r.done for r in reqs_r) and all(r.done for r in reqs_p)
+    for rr, rp in zip(reqs_r, reqs_p):
+        np.testing.assert_allclose(rp.result, rr.result, atol=1e-5)
+
+
+def test_analog_batcher_steady_state_no_repacking(analog_engine):
+    """Params don't change between ticks, so after the first tick the
+    coefficient-pack cache must absorb all packing work."""
+    from repro.kernels import ops
+
+    n, _, pal_m, params = analog_engine
+    b = AnalogTickBatcher(pal_m, params, slots=4)
+    reqs = _analog_reqs(n, 4, seed=1)
+    for r in reqs:
+        b.submit(r)
+    b.run()  # first tick may pack (cold cache)
+    packs = ops.PACK_EVENTS["rfnn_network"]
+    for tick in range(3):
+        more = _analog_reqs(n, 9, seed=2 + tick)
+        for r in more:
+            b.submit(r)
+        b.run()
+        assert all(r.done for r in more)
+    assert ops.PACK_EVENTS["rfnn_network"] == packs  # zero packing work
