@@ -268,6 +268,49 @@ def net_fwd_bwd(configs=None, n_layers=4) -> list[str]:
     return rows
 
 
+def compile_apply(n=16, batch=None) -> list[str]:
+    """Compiled-program apply vs the retired reference synthesis chain.
+
+    The compiler's ``lower`` pass emits megakernel tensors once; ``apply``
+    is then a single fused ``pallas_call``.  The baseline is what
+    ``SynthesizedMatrix.apply`` used to run before the repoint: two
+    pure-jnp ``apply_mesh`` column scans (V, U) with the diagonal and
+    digital scale between them.  ``compile_apply_n16`` is a CI gate row.
+    """
+    import numpy as np
+
+    from repro import compile as compile_mod
+
+    batch = batch or (64 if SMOKE else 256)
+    m = np.random.default_rng(0).normal(size=(n, n))
+    prog = compile_mod.program(compile_mod.synthesize(m), method="reck")
+    compiled = compile_mod.lower(prog, block_b=64)
+    la = prog.layers[0]
+    atten = la.attenuation.astype(jnp.complex64)
+    scale = jnp.asarray(la.scale, jnp.complex64)
+
+    def ref_apply(xx):
+        h = mesh_lib.apply_mesh(la.v_plan, la.v_params,
+                                xx.astype(jnp.complex64))
+        h = h * atten
+        h = mesh_lib.apply_mesh(la.u_plan, la.u_params, h)
+        return jnp.abs(scale * h)
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (batch, n), jnp.float32)
+    k_fn = compiled.apply
+    r_fn = jax.jit(ref_apply)
+    err = float(jnp.max(jnp.abs(k_fn(x) - r_fn(x))))
+    # min-of-N: this row is a differential CI gate on a shared runner
+    us_k = time_call(k_fn, x, iters=5, reduce="min")
+    us_r = time_call(r_fn, x, iters=5, reduce="min")
+    # reference: one HBM round-trip per mesh column (2 x (2n-3) columns)
+    hbm_ref = 2 * (2 * n - 3) * batch * n * 8
+    hbm_kernel = 2 * batch * n * 8
+    return [row(f"compile_apply_n{n}", us_k,
+                f"ref_apply_us={us_r:.1f};max_err={err:.1e};"
+                f"hbm_bytes {hbm_kernel} vs {hbm_ref}")]
+
+
 def flash_attention_kernel(s=None, hd=64, h=4, b=2) -> list[str]:
     """Flash attention kernel vs dense-softmax reference (interpret mode)."""
     s = s or (256 if SMOKE else 512)
@@ -293,4 +336,4 @@ def flash_attention_kernel(s=None, hd=64, h=4, b=2) -> list[str]:
 
 ALL = [mesh_kernel_sweep, fused_rfnn_linear, mesh_kernel_fwd_bwd,
        mesh_fwd_bwd_nonideal, mc_yield_sweep, rfnn_linear_fwd_bwd,
-       net_fwd_bwd, flash_attention_kernel]
+       net_fwd_bwd, compile_apply, flash_attention_kernel]

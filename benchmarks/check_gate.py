@@ -7,7 +7,11 @@ baseline — the regressions this repo's kernels exist to prevent:
   reference autodiff (``ref_autodiff_us`` in the derived column);
 * ``net_fwd_bwd_n16_b1024`` — the whole-network megakernel (one
   pallas_call per direction for the 4-layer RFNN) must beat the
-  per-layer kernel composition (``per_layer_us``).
+  per-layer kernel composition (``per_layer_us``);
+* ``compile_apply_n16`` — a compiled analog program
+  (``repro.compile.lower``, pre-packed megakernel tensors) must beat
+  the retired pure-jnp ``SynthesizedMatrix.apply`` reference chain
+  (``ref_apply_us``).
 
 With ``--prev PREV.json`` it additionally diffs each timed row against a
 previous run (the committed ``BENCH_kernels.json`` trajectory) and
@@ -30,6 +34,7 @@ import sys
 GATED_ROWS = {
     "mesh_fwd_bwd_n16": "ref_autodiff_us",
     "net_fwd_bwd_n16_b1024": "per_layer_us",
+    "compile_apply_n16": "ref_apply_us",
 }
 
 

@@ -1,0 +1,34 @@
+"""Analog program compiler: digital weights -> servable mesh programs.
+
+The paper's digital->analog transfer (Sec. IV-B, Fig. 11) as a pass
+pipeline over a small IR:
+
+    prog = synthesize([w1, w2, ...])       # SVD factorization (Eq. 31)
+    prog = program(prog, method="reck")    # or the kernel-backed "fit"
+    prog = quantize(prog, "table1")        # Table-I phase snapping
+    prog = calibrate(prog, PROTOTYPE, key=k)   # hardware-in-the-loop trim
+    compiled = lower(prog)                 # megakernel tensors, pre-packed
+    y = compiled.apply(x)                  # one fused pallas_call
+"""
+
+from repro.compile.passes import (
+    calibrate,
+    lower,
+    program,
+    quantize,
+    resolve_codebook,
+    synthesize,
+)
+from repro.compile.program import (
+    AnalogProgram,
+    CompiledProgram,
+    ProgramLayer,
+    layer_matrix,
+    program_error,
+)
+
+__all__ = [
+    "AnalogProgram", "CompiledProgram", "ProgramLayer", "calibrate",
+    "layer_matrix", "lower", "program", "program_error", "quantize",
+    "resolve_codebook", "synthesize",
+]

@@ -1,0 +1,228 @@
+"""The ``AnalogProgram`` IR: digital weights compiled onto the RF processor.
+
+The paper's digital->analog transfer (Sec. IV-B, Fig. 11) is a compiler
+pipeline: factor trained weight matrices (SVD, Eq. 31), program the two
+unitary factors onto cell meshes, snap phases to the device codebook
+(Table I), trim against the measured hardware, and hand the result to the
+serving kernels.  This module holds the IR those passes transform:
+
+* :class:`ProgramLayer` — one analog layer ``y = |gamma . U (D (V x))|``:
+  the SVD targets, the diagonal attenuation + digital gamma, the mesh
+  plans/params filled in by the ``program`` pass, the quantization state
+  (codebook + integer device codes) and the hardware binding (model +
+  frozen phase-noise draw keys) from ``calibrate``.
+* :class:`AnalogProgram` — an L-layer stack of those (one entry for a
+  single matrix).
+* :class:`CompiledProgram` — the ``lower`` pass output: a static
+  :class:`~repro.kernels.schedule.NetworkSchedule` plus the stacked
+  ``[L, C, 8, P]`` megakernel coefficients, pre-emitted through the pack
+  cache so ``apply`` is pure kernel execution with zero packing work.
+
+The IR is deliberately host-side (frozen dataclasses, not pytrees): passes
+return new programs, and only ``lower`` touches the device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hardware as hw_lib
+from repro.core import mesh as mesh_lib
+from repro.core import quantize as q_lib
+from repro.kernels import ops as kernel_ops
+from repro.kernels.schedule import NetworkSchedule
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramLayer:
+    """One analog layer of the IR; passes fill in the optional fields."""
+
+    n: int                      # padded square mesh size (even)
+    out_dim: int
+    in_dim: int
+    target: np.ndarray          # [out_dim, in_dim] digital weight matrix
+    target_u: np.ndarray        # [n, n] unitary (SVD left factor)
+    target_vh: np.ndarray       # [n, n] unitary (SVD right factor, V^H)
+    attenuation: Array          # [n] diagonal D / sigma_max, in [0, 1]
+    scale: Array                # digital gamma (sigma_max), scalar f32
+    # filled by the ``program`` pass
+    v_plan: mesh_lib.MeshPlan | None = None
+    v_params: dict | None = None
+    u_plan: mesh_lib.MeshPlan | None = None
+    u_params: dict | None = None
+    # filled by the ``quantize`` pass
+    codebook: Array | None = None
+    quant_mode: str | None = None        # "nearest" | "ste"
+    v_codes: dict | None = None          # integer device state codes
+    u_codes: dict | None = None
+    # filled by the ``calibrate`` pass
+    hardware: hw_lib.HardwareModel | None = None
+    key_v: Array | None = None           # frozen per-device noise draws
+    key_u: Array | None = None
+
+    @property
+    def programmed(self) -> bool:
+        return self.v_params is not None and self.u_params is not None
+
+    def replace(self, **kw) -> "ProgramLayer":
+        return dataclasses.replace(self, **kw)
+
+    def device_params(self, which: str) -> dict:
+        """The phases the device realizes: codebook-snapped when quantized.
+
+        ``quant_mode="nearest"`` layers store snapped params already (the
+        snap is then idempotent); ``"ste"`` layers keep continuous masters
+        and snap here, at the device boundary.
+        """
+        params = self.v_params if which == "v" else self.u_params
+        if params is None:
+            raise ValueError(f"layer has no programmed {which!r} mesh — "
+                             "run the `program` pass first")
+        if self.codebook is None:
+            return params
+        return q_lib.quantize_mesh_params(params, self.codebook, ste=False)
+
+    def padded_target(self) -> np.ndarray:
+        """The [n, n] zero-padded complex target matrix."""
+        t = np.zeros((self.n, self.n), np.complex128)
+        t[: self.out_dim, : self.in_dim] = self.target
+        return t
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogProgram:
+    """An L-layer analog program (L == 1 for a single matrix)."""
+
+    layers: tuple[ProgramLayer, ...]
+
+    def __post_init__(self):
+        if not self.layers:
+            raise ValueError("an AnalogProgram needs at least one layer")
+        n = self.layers[0].n
+        if any(la.n != n for la in self.layers):
+            raise ValueError(
+                f"all layers must share the padded mesh size, got "
+                f"{[la.n for la in self.layers]}")
+
+    @property
+    def n(self) -> int:
+        return self.layers[0].n
+
+    @property
+    def depth(self) -> int:
+        return len(self.layers)
+
+    @property
+    def in_dim(self) -> int:
+        return self.layers[0].in_dim
+
+    @property
+    def out_dim(self) -> int:
+        return self.layers[-1].out_dim
+
+    @property
+    def programmed(self) -> bool:
+        return all(la.programmed for la in self.layers)
+
+    def map_layers(self, fn) -> "AnalogProgram":
+        return AnalogProgram(layers=tuple(fn(la) for la in self.layers))
+
+    def n_cells(self) -> int:
+        return sum(la.v_plan.n_cells + la.u_plan.n_cells
+                   for la in self.layers if la.programmed)
+
+
+def layer_matrix(layer: ProgramLayer, *, device: bool = True,
+                 with_hardware: bool = True) -> np.ndarray:
+    """The complex [out_dim, in_dim] matrix a programmed layer realizes.
+
+    Runs the kernel path (two ``ops.mesh_apply`` probes over the identity
+    batch).  ``device=True`` uses the codebook-snapped phases (what the
+    hardware actually holds); ``with_hardware=True`` includes the layer's
+    hardware binding and its frozen noise-draw keys, so the result is the
+    as-fabricated matrix the ``calibrate`` pass fitted against.
+    """
+    if not layer.programmed:
+        raise ValueError("layer is not programmed")
+    vp = layer.device_params("v") if device else layer.v_params
+    up = layer.device_params("u") if device else layer.u_params
+    hw = layer.hardware if with_hardware else None
+    kv = layer.key_v if with_hardware else None
+    ku = layer.key_u if with_hardware else None
+    probes = jnp.eye(layer.n, dtype=jnp.complex64)
+    h = kernel_ops.mesh_apply(vp, probes, n=layer.n, plan=layer.v_plan,
+                              hardware=hw, key=kv)
+    h = h * layer.attenuation.astype(jnp.complex64)
+    h = kernel_ops.mesh_apply(up, h, n=layer.n, plan=layer.u_plan,
+                              hardware=hw, key=ku)
+    rec = jnp.asarray(layer.scale, jnp.complex64) * h
+    return np.asarray(rec).T[: layer.out_dim, : layer.in_dim]
+
+
+def program_error(prog: AnalogProgram, *, device: bool = True,
+                  with_hardware: bool = True) -> float:
+    """Worst-case elementwise synthesis error across the program's layers."""
+    return max(
+        float(np.abs(layer_matrix(la, device=device,
+                                  with_hardware=with_hardware)
+                     - la.target).max())
+        for la in prog.layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledProgram:
+    """The ``lower`` pass output: megakernel inputs, ready to serve.
+
+    ``net``/``packed`` are the ``ops.pack_network`` result emitted at
+    lower time; every ``apply`` hands them straight back to
+    :func:`repro.kernels.ops.rfnn_network` (``packed=``), so serving does
+    **zero** packing work — first tick included, and independent of the
+    shared pack cache's eviction policy.  ``layer_args`` (with its stable
+    parameter leaf identities, which also keep the cache entry exact) is
+    retained as the program's kernel-level parameter view.
+    """
+
+    n: int
+    in_dim: int
+    out_dim: int
+    depth: int
+    plans: tuple
+    layer_args: tuple
+    hardware: hw_lib.HardwareModel | None
+    net: NetworkSchedule
+    packed: tuple                # (coef_v [L,C,8,P], coef_u, gains [L,12,P])
+    block_b: int | None = None
+    interpret: bool | None = None
+
+    def apply(self, x: Array) -> Array:
+        """``x[..., in_dim]`` -> detected magnitudes ``[..., out_dim]``.
+
+        One fused network-megakernel ``pallas_call``: per layer
+        ``|gamma_l . U_l (D_l (V_l .))|`` with the detected magnitude
+        feeding the next layer, exactly the multi-layer microwave ANN.
+        """
+        if x.shape[-1] != self.in_dim:
+            raise ValueError(
+                f"expected trailing dim {self.in_dim}, got {x.shape}")
+        if jnp.iscomplexobj(x):
+            xc = x.astype(jnp.complex64)
+        else:
+            xc = jnp.asarray(x, jnp.float32).astype(jnp.complex64)
+        pad = self.n - x.shape[-1]
+        if pad:
+            xc = jnp.concatenate(
+                [xc, jnp.zeros(xc.shape[:-1] + (pad,), xc.dtype)], axis=-1)
+        y = kernel_ops.rfnn_network(
+            self.layer_args, xc, n=self.n, plans=self.plans,
+            hardware=self.hardware, block_b=self.block_b,
+            interpret=self.interpret, packed=(self.net, self.packed))
+        return y[..., : self.out_dim]
+
+    def n_cells(self) -> int:
+        return sum(vp.n_cells + up.n_cells for vp, up in self.plans)

@@ -39,7 +39,6 @@ import numpy as np
 from repro.core import hardware as hw_lib
 from repro.core import mesh as mesh_lib
 from repro.core import quantize as q_lib
-from repro.core import svd_synthesis
 from repro.kernels import ops as kernel_ops
 
 Array = jax.Array
@@ -211,21 +210,28 @@ class AnalogLinear:
         return _readout(y, self.output, None, None)
 
     def init_from_matrix(self, m: np.ndarray) -> dict:
-        """Program the layer to realize a given matrix (analytic SVD path)."""
-        syn = svd_synthesis.synthesize(m)
-        if syn.n != self.n:
-            raise ValueError(f"matrix pad size {syn.n} != layer size {self.n}")
-        atten = np.clip(np.asarray(syn.attenuation), 1e-6, 1 - 1e-6)
+        """Program the layer to realize a given matrix.
+
+        Runs the compiler's ``synthesize`` + ``program`` passes (analytic
+        Reck factorization) and adopts the resulting program's plans.
+        """
+        from repro import compile as compile_mod  # lazy: core <-> compile
+        from repro.compile.passes import inv_softplus, logit
+
+        prog = compile_mod.program(compile_mod.synthesize(m), method="reck")
+        la = prog.layers[0]
+        if la.n != self.n:
+            raise ValueError(f"matrix pad size {la.n} != layer size {self.n}")
         # The analytic program lives on reck plans; adopt them (device
         # reprogramming changes the physical layout, not the API).
         params = {
-            "u": dict(syn.u_params),
-            "v": dict(syn.v_params),
-            "atten_logit": jnp.asarray(np.log(atten / (1 - atten)), jnp.float32),
-            "log_scale": jnp.asarray(np.log(np.expm1(syn.scale)), jnp.float32),
+            "u": dict(la.u_params),
+            "v": dict(la.v_params),
+            "atten_logit": logit(jnp.asarray(la.attenuation, jnp.float32)),
+            "log_scale": inv_softplus(jnp.asarray(la.scale, jnp.float32)),
         }
-        object.__setattr__(self, "_u_plan", syn.u_plan)
-        object.__setattr__(self, "_v_plan", syn.v_plan)
+        object.__setattr__(self, "_u_plan", la.u_plan)
+        object.__setattr__(self, "_v_plan", la.v_plan)
         return params
 
     def n_cells(self) -> int:

@@ -113,14 +113,18 @@ def fit_program(
 ):
     """Gradient programming of ``target`` onto a mesh layout.
 
-    Uses Adam on (theta, phi, alpha, alpha_in) minimizing the Frobenius error
-    of the realized matrix — the paper's "stochastic optimization" programming
-    path.  NOTE (validated empirically, see DESIGN.md): because the paper's
+    Uses :class:`repro.optim.AdamW` on (theta, phi, alpha, alpha_in),
+    minimizing the Frobenius error of the realized matrix — the paper's
+    "stochastic optimization" programming path — with the whole step loop
+    inside one jitted ``lax.scan`` (one compile, no per-step dispatch).
+    NOTE (validated empirically, see DESIGN.md): because the paper's
     cell has a single external phase (phi on the output of channel 1), the
     rectangle with an *output-only* Sigma screen is not universal over U(N);
     an input phase screen restores exact universality, so it is on by
     default.  Returns ``(plan, params, final_error)``.
     """
+    from repro.optim.adamw import AdamW
+
     target = jnp.asarray(target, jnp.complex64)
     n = target.shape[0]
     if plan is None:
@@ -133,25 +137,20 @@ def fit_program(
         rec = mesh_lib.mesh_matrix(plan, p)
         return jnp.sum(jnp.abs(rec - target) ** 2)
 
-    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
-    m = jax.tree.map(jnp.zeros_like, params)
-    s = jax.tree.map(jnp.zeros_like, params)
-    b1, b2, eps = 0.9, 0.999, 1e-8
+    opt = AdamW(lr=lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                clip_norm=0.0)
 
     @jax.jit
-    def step(i, params, m, s):
-        loss, g = grad_fn(params)
-        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
-        s = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, s, g)
-        t = i + 1.0
-        def upd(p, mm, ss):
-            mh = mm / (1 - b1**t)
-            sh = ss / (1 - b2**t)
-            return p - lr * mh / (jnp.sqrt(sh) + eps)
-        return jax.tree.map(upd, params, m, s), m, s, loss
+    def run(params, state):
+        def step(carry, _):
+            p, s = carry
+            loss, g = jax.value_and_grad(loss_fn)(p)
+            p, s, _ = opt.update(p, g, s)
+            return (p, s), loss
+        (params, state), losses = jax.lax.scan(
+            step, (params, state), None, length=steps)
+        return params, losses
 
-    loss = jnp.inf
-    for i in range(steps):
-        params, m, s, loss = step(float(i), params, m, s)
+    params, _ = run(params, opt.init(params))
     err = reconstruction_error(plan, params, np.asarray(target))
     return plan, params, err

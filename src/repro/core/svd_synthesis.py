@@ -1,12 +1,11 @@
 """Arbitrary-matrix synthesis via SVD (paper Eq. 31, Sec. IV-B).
 
-Any real or complex matrix M factors as M = U . D . V^H with U, V unitary and
-D diagonal non-negative.  U and V^H are realized as cell meshes (programmed
-analytically by :func:`repro.core.decompose.reck_program`); D is realized as
-per-channel attenuation.  A passive network can only attenuate, so D is
-normalized by the largest singular value and the overall scale is recovered
-digitally — exactly the paper's pre/post scaling-factor gamma (Fig. 11).
-Rectangular matrices are zero-padded to the enclosing even square.
+Compatibility facade over the analog program compiler: the factorization
+itself now lives in :mod:`repro.compile` (``synthesize`` + ``program``
+passes), and :meth:`SynthesizedMatrix.apply` runs on the fused Pallas
+mesh kernels (``repro.kernels.ops.mesh_apply``) — the pure-jnp reference
+chain this module used to carry is gone.  Kept so existing call sites
+(`synthesize(m)` -> programmed object -> `apply`/`matrix`) stay stable.
 """
 
 from __future__ import annotations
@@ -17,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import decompose, mesh as mesh_lib
+from repro.core import mesh as mesh_lib
 
 Array = jax.Array
 
@@ -41,14 +40,27 @@ class SynthesizedMatrix:
         return self.u_plan.n_cells + self.v_plan.n_cells
 
     def apply(self, x: Array) -> Array:
-        """y = M x for x[..., in_dim]; returns [..., out_dim] (complex)."""
+        """y = M x for x[..., in_dim]; returns [..., out_dim] (complex).
+
+        Runs V-mesh -> attenuation -> U-mesh through the fused Pallas
+        kernels — the same path training and serving use; there is no
+        reference fallback.
+        """
+        from repro.kernels import ops as kernel_ops
+
+        if x.shape[-1] != self.in_dim:
+            raise ValueError(
+                f"expected trailing dim {self.in_dim}, got {x.shape}")
         pad = self.n - x.shape[-1]
         if pad:
             x = jnp.concatenate(
                 [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
-        h = mesh_lib.apply_mesh(self.v_plan, self.v_params, x)
+        x = x.astype(jnp.complex64)
+        h = kernel_ops.mesh_apply(self.v_params, x, n=self.n,
+                                  plan=self.v_plan)
         h = h * self.attenuation.astype(jnp.complex64)
-        h = mesh_lib.apply_mesh(self.u_plan, self.u_params, h)
+        h = kernel_ops.mesh_apply(self.u_params, h, n=self.n,
+                                  plan=self.u_plan)
         return self.scale * h[..., : self.out_dim]
 
     def matrix(self) -> np.ndarray:
@@ -56,27 +68,22 @@ class SynthesizedMatrix:
         return np.asarray(self.apply(eye)).T
 
 
-def _pad_even(k: int) -> int:
-    return k + (k % 2)
-
-
 def synthesize(m: np.ndarray) -> SynthesizedMatrix:
-    """Program an analog realization of the (possibly rectangular) matrix m."""
-    m = np.asarray(m)
-    out_dim, in_dim = m.shape
-    n = _pad_even(max(out_dim, in_dim))
-    mp = np.zeros((n, n), np.complex128)
-    mp[:out_dim, :in_dim] = m
-    u, s, vh = np.linalg.svd(mp)
-    smax = float(s.max()) if s.max() > 0 else 1.0
-    u_plan, u_params = decompose.reck_program(u)
-    v_plan, v_params = decompose.reck_program(vh)
+    """Program an analog realization of the (possibly rectangular) matrix m.
+
+    Delegates to the compiler's ``synthesize`` + ``program`` passes
+    (analytic Reck factorization); use :mod:`repro.compile` directly for
+    quantization, hardware calibration and megakernel lowering.
+    """
+    from repro import compile as compile_mod  # lazy: core <-> compile
+
+    prog = compile_mod.program(compile_mod.synthesize(m), method="reck")
+    la = prog.layers[0]
     return SynthesizedMatrix(
-        out_dim=out_dim, in_dim=in_dim, n=n,
-        u_plan=u_plan, u_params=u_params,
-        v_plan=v_plan, v_params=v_params,
-        attenuation=jnp.asarray(s / smax, jnp.float32),
-        scale=smax,
+        out_dim=la.out_dim, in_dim=la.in_dim, n=la.n,
+        u_plan=la.u_plan, u_params=la.u_params,
+        v_plan=la.v_plan, v_params=la.v_params,
+        attenuation=la.attenuation, scale=float(la.scale),
     )
 
 

@@ -503,11 +503,40 @@ def memoize_by_leaf_ids(static_key, tree, builder):
     return cache.get_or_build(static_key, tree, builder)
 
 
+def pack_network(layers, *, n: int, plans=None,
+                 hardware: hw_lib.HardwareModel | None = None):
+    """Emit the megakernel inputs for an L-layer RFNN program.
+
+    Returns ``(net, (coef_v, coef_u, gains))``: the static
+    :class:`~repro.kernels.schedule.NetworkSchedule` plus the stacked
+    ``[L, C, 8, P]`` coefficient tensors and ``[L, 12, P]`` gain rows,
+    identity-padded to the schedule's common column count.  This is the
+    packing step of :func:`rfnn_network`, exposed so offline compilation
+    (``repro.compile.lower``) can emit — and pre-warm — the exact tensors
+    the serving path consumes.  Results go through the leaf-identity pack
+    cache: a later :func:`rfnn_network` call with the same (immutable)
+    layer arrays reuses them with zero packing work.  Tracer leaves
+    bypass the cache so gradients flow through packing.
+    """
+    layers = tuple(layers)
+    net = network_schedule(n, len(layers), plans)
+
+    def build():
+        PACK_EVENTS["rfnn_network"] += 1
+        return _pack_network_impl(net, hardware, layers)
+
+    if _contains_tracer(layers):
+        return net, build()
+    return net, _NETWORK_PACK_CACHE.get_or_build(
+        (net, hardware), layers, build)
+
+
 def rfnn_network(layers, x: Array, *, n: int,
                  plans=None,
                  hardware: hw_lib.HardwareModel | None = None,
                  block_b: int | None = None,
-                 interpret: bool | None = None) -> Array:
+                 interpret: bool | None = None,
+                 packed=None) -> Array:
     """The fused L-layer RFNN |.. |scale_l * U_l(D_l(V_l ..))| .. | sweep.
 
     ``layers``: per-layer dicts with keys ``v``/``u`` (mesh params,
@@ -528,20 +557,17 @@ def rfnn_network(layers, x: Array, *, n: int,
     through packing exactly as in the per-layer path.  ``block_b=None``
     sizes the batch block to the kernel's VMEM target (large blocks for
     small networks, shrinking with n and L).
+
+    ``packed``: an explicit ``pack_network`` result ``(net, tensors)`` —
+    callers that emitted their coefficients offline (compiled analog
+    programs) hand them back here and skip the pack/cache lookup
+    entirely, so their zero-packing guarantee cannot be evicted out from
+    under them by other users of the shared cache.
     """
     if interpret is None:
         interpret = _default_interpret()
-    layers = tuple(layers)
-    net = network_schedule(n, len(layers), plans)
     KERNEL_PATH_CALLS["rfnn_network"] += 1
-
-    def build():
-        PACK_EVENTS["rfnn_network"] += 1
-        return _pack_network_impl(net, hardware, layers)
-
-    if _contains_tracer(layers):
-        packed = build()
-    else:
-        packed = _NETWORK_PACK_CACHE.get_or_build(
-            (net, hardware), layers, build)
-    return _rfnn_network_apply_impl(net, block_b, interpret, *packed, x)
+    if packed is None:
+        packed = pack_network(layers, n=n, plans=plans, hardware=hardware)
+    net, tensors = packed
+    return _rfnn_network_apply_impl(net, block_b, interpret, *tensors, x)

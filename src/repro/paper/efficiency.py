@@ -119,7 +119,13 @@ def monte_carlo_yield(n: int = 8, n_draws: int = 32, *, base=None,
     x = (jax.random.normal(kx, (batch, n))
          + 1j * jax.random.normal(jax.random.fold_in(kx, 1),
                                   (batch, n))).astype(jnp.complex64)
-    y_ideal = jnp.abs(mesh_lib.apply_mesh(plan, params, x))
+    # the ideal-device baseline rides the same backend as the draws: with
+    # backend="pallas" the whole sweep — baseline included — never touches
+    # the pure-jnp reference path
+    if backend == "pallas":
+        y_ideal = jnp.abs(ops.mesh_apply(params, x, n=n, block_b=block_b))
+    else:
+        y_ideal = jnp.abs(mesh_lib.apply_mesh(plan, params, x))
     draws = sample_hardware_draws(kd, n_draws, base=base, spread=spread)
 
     def device_error(eps, perr, loss_db, noise_key):

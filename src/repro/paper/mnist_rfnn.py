@@ -74,6 +74,12 @@ class MnistRFNN:
         }
         if self.analog:
             params["mesh"] = self.mesh.init(k2)
+        elif self.analog_depth > 1:
+            # digital stack mirroring the Sec.-V multi-layer analog section:
+            # L free d x d matrices with |.| detection between them — the
+            # source network of the digital->analog transfer (Fig. 11)
+            params["w2"] = jax.random.normal(
+                k2, (self.analog_depth, self.d_hidden, self.d_hidden)) * 0.3
         else:
             params["w2"] = jax.random.normal(k2, (self.d_hidden,
                                                   self.d_hidden)) * 0.3
@@ -83,6 +89,10 @@ class MnistRFNN:
         h1 = jax.nn.leaky_relu(x @ params["w1"] + params["b1"], 0.01)
         if self.analog:
             h2 = self.mesh.apply(params["mesh"], h1, key=key)  # abs detect
+        elif params["w2"].ndim == 3:
+            h2 = h1
+            for l in range(params["w2"].shape[0]):
+                h2 = jnp.abs(h2 @ params["w2"][l])  # per-layer |.| detect
         else:
             h2 = jnp.abs(h1 @ params["w2"])  # same activation, free matrix
         return h2 @ params["w3"] + params["b3"]  # logits (softmax in loss)
@@ -117,7 +127,7 @@ def train_mnist(x_tr, y_tr, x_te, y_te, *, analog=True, hardware=PROTOTYPE,
     refinement of Algorithm I addresses the single-mesh phase codes, so
     deep stacks train with the straight-through schedule instead.
     """
-    if analog_depth > 1 and schedule == "algorithm1":
+    if analog and analog_depth > 1 and schedule == "algorithm1":
         warnings.warn(
             "analog_depth > 1 does not support schedule='algorithm1' (the "
             "DSPSA refinement addresses single-mesh phase codes); falling "
@@ -250,6 +260,86 @@ def _dspsa_refine(model, params, x, y, *, steps=25, seed=0, sample=512):
     out = dict(params)
     out["mesh"] = mesh
     return out
+
+
+def digital_to_analog_transfer(
+        x_tr, y_tr, x_te, y_te, *, depth=4, epochs=40, batch=10, lr=0.02,
+        seed=0, hardware=PROTOTYPE,
+        settings=("float", "table1", "uniform6", "hardware",
+                  "hardware+calibrated"),
+        program_method="reck", program_steps=1500, calibrate_steps=200,
+        calibrate_lr=0.02, block_b=None):
+    """The paper's Fig. 11/14 digital->analog transfer, end to end.
+
+    Trains the digital source network (784 -> 8 digital front-end, then a
+    ``depth``-layer stack of free 8x8 matrices with |.| detection between
+    layers — the multi-layer microwave ANN's digital twin), compiles every
+    8x8 weight matrix onto the mesh processor through the analog program
+    compiler (:mod:`repro.compile`), and reports the digital->analog test
+    accuracy drop per deployment ``setting``.
+
+    Settings are ``+``-joined tokens: a codebook name (``table1`` /
+    ``uniform<bits>``) turns on the quantize pass (STE masters),
+    ``hardware`` binds the imperfection model (with frozen phase-noise
+    draws), ``calibrated`` runs the hardware-in-the-loop residual fit;
+    ``float`` is the ideal continuous-phase deployment.  Every compiled
+    program serves through the network megakernel
+    (``ops.rfnn_network``) — there is no reference fallback anywhere in
+    the analog path.
+    """
+    from repro import compile as compile_mod
+
+    digital = train_mnist(x_tr, y_tr, x_te, y_te, analog=False,
+                          epochs=epochs, batch=batch, lr=lr, seed=seed,
+                          quantize=None, schedule="ste",
+                          analog_depth=depth)
+    params = digital["params"]
+    w2 = params["w2"]
+    mats = ([np.asarray(w2[l]).T for l in range(depth)] if w2.ndim == 3
+            else [np.asarray(w2).T])
+    base = compile_mod.program(compile_mod.synthesize(mats),
+                               method=program_method, steps=program_steps,
+                               seed=seed)
+    key = jax.random.PRNGKey(seed + 7)
+
+    def compile_setting(setting):
+        prog = base
+        toks = setting.split("+")
+        for t in toks:
+            if t not in ("float", "hardware", "calibrated"):
+                prog = compile_mod.quantize(prog, t, mode="ste")
+        hw = hardware if "hardware" in toks else None
+        if "calibrated" in toks:
+            prog = compile_mod.calibrate(prog, hw, key=key,
+                                         steps=calibrate_steps,
+                                         lr=calibrate_lr)
+        elif hw is not None:
+            # bind the device (and its frozen noise draw) without trimming
+            prog = compile_mod.calibrate(prog, hw, key=key, steps=0)
+        return prog, compile_mod.lower(prog, block_b=block_b)
+
+    w1, b1 = params["w1"], params["b1"]
+    w3, b3 = params["w3"], params["b3"]
+
+    def eval_acc(compiled, x, y):
+        h1 = jax.nn.leaky_relu(jnp.asarray(x) @ w1 + b1, 0.01)
+        h2 = compiled.apply(h1)   # fused megakernel: the whole analog stack
+        logits = h2 @ w3 + b3
+        return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
+
+    results = {"digital_test_acc": digital["test_acc"], "depth": depth,
+               "params": params, "program": base, "settings": {},
+               "compiled": {}}
+    for setting in settings:
+        prog, compiled = compile_setting(setting)
+        acc = eval_acc(compiled, x_te, y_te)
+        results["settings"][setting] = {
+            "test_acc": acc,
+            "acc_drop": digital["test_acc"] - acc,
+            "synthesis_error": compile_mod.program_error(prog),
+        }
+        results["compiled"][setting] = compiled
+    return results
 
 
 def confusion_matrix(model, params, x, y, n_classes=10):

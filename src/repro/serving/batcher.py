@@ -158,18 +158,27 @@ class AnalogTickBatcher:
     params never change between ticks).  Unfilled slots ride as zero rows
     — exactly the kernels' ragged-batch padding semantics.
 
+    ``params=None`` serves a parameter-less model such as a
+    :class:`repro.compile.CompiledProgram` (``model.apply(x)``): the
+    program's megakernel tensors were already emitted through the pack
+    cache at ``lower`` time, so *every* tick — the first included — does
+    zero packing work.
+
     ``mesh``: optional ``jax.sharding.Mesh`` — ticks are then sharded over
     the batch grid via :func:`repro.parallel.sharding.data_parallel`, the
     same megakernel running per-device.
     """
 
-    def __init__(self, model, params, *, slots: int, mesh=None,
+    def __init__(self, model, params=None, *, slots: int, mesh=None,
                  data_axis: str = "data"):
         self.model = model
         self.params = params
         self.n_slots = slots
         self.queue: list[AnalogRequest] = []
-        self._apply = lambda p, x: model.apply(p, x)
+        if params is None:
+            self._apply = lambda p, x: model.apply(x)
+        else:
+            self._apply = lambda p, x: model.apply(p, x)
         if mesh is not None:
             from repro.parallel.sharding import data_parallel
 

@@ -1,0 +1,201 @@
+"""The analog program compiler: synthesize -> program -> lower -> serve.
+
+Covers the tentpole contract: every stage of the digital->analog transfer
+runs on the Pallas kernels (no reference fallback), lowering emits the
+megakernel tensors exactly once through the pack cache, and serving a
+compiled program performs zero packing work.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compile as compile_mod
+from repro.kernels import ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# synthesize + program
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(3, 5), (5, 3), (8, 8)])
+def test_synthesize_program_reck_realizes_matrix(shape):
+    m = np.random.default_rng(0).normal(size=shape)
+    prog = compile_mod.program(compile_mod.synthesize(m), method="reck")
+    assert compile_mod.program_error(prog) < 1e-4
+    assert float(jnp.max(prog.layers[0].attenuation)) <= 1.0 + 1e-6
+
+
+def test_synthesize_stack_shares_mesh_size():
+    mats = [np.ones((3, 5)), np.ones((8, 3))]
+    prog = compile_mod.synthesize(mats)
+    assert prog.n == 8 and prog.depth == 2
+    assert prog.in_dim == 5 and prog.out_dim == 8
+
+
+def test_synthesize_rejects_nonchaining_stack():
+    with pytest.raises(ValueError, match="does not chain"):
+        compile_mod.synthesize([np.ones((4, 6)), np.ones((8, 3))])
+
+
+def test_synthesize_accepts_plain_nested_list():
+    """The legacy svd_synthesis surface accepted a plain 2-D list."""
+    prog = compile_mod.synthesize([[1.0, 0.0], [0.0, 1.0]])
+    assert prog.depth == 1 and prog.layers[0].target.shape == (2, 2)
+
+
+def test_program_fit_is_kernel_backed():
+    """The gradient programming path sweeps identity probes through
+    ``ops.mesh_apply`` — the paper's stochastic-optimization programming
+    with no pure-jnp reference anywhere in the loss."""
+    m = np.random.default_rng(1).normal(size=(4, 4))
+    before = ops.KERNEL_PATH_CALLS["mesh_apply"]
+    prog = compile_mod.program(compile_mod.synthesize(m), method="fit",
+                               steps=1200, lr=0.05, seed=0)
+    assert ops.KERNEL_PATH_CALLS["mesh_apply"] > before
+    assert compile_mod.program_error(prog) < 2e-2
+
+
+# ---------------------------------------------------------------------------
+# lower + apply: megakernel path, packing exactly once
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def two_layer():
+    rng = np.random.default_rng(2)
+    mats = [rng.normal(size=(8, 8)) * 0.5 for _ in range(2)]
+    prog = compile_mod.program(compile_mod.synthesize(mats), method="reck")
+    return mats, prog
+
+
+def test_lower_packs_once_apply_never_repacks(two_layer):
+    mats, prog = two_layer
+    packs = ops.PACK_EVENTS["rfnn_network"]
+    compiled = compile_mod.lower(prog)
+    assert ops.PACK_EVENTS["rfnn_network"] == packs + 1  # emitted at lower
+    calls = ops.KERNEL_PATH_CALLS["rfnn_network"]
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(5, 8)),
+                    jnp.float32)
+    for _ in range(3):
+        compiled.apply(x)
+    assert ops.KERNEL_PATH_CALLS["rfnn_network"] == calls + 3  # megakernel
+    assert ops.PACK_EVENTS["rfnn_network"] == packs + 1  # zero repacking
+
+
+def test_compiled_apply_matches_digital_stack(two_layer):
+    """|M2 |M1 x|| through the fused megakernel == the digital twin."""
+    mats, prog = two_layer
+    compiled = compile_mod.lower(prog)
+    x = np.random.default_rng(4).normal(size=(6, 8)).astype(np.float32)
+    want = np.abs(np.abs(x @ mats[0].T) @ mats[1].T)
+    got = np.asarray(compiled.apply(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_compiled_apply_pads_rectangular_input():
+    m = np.random.default_rng(5).normal(size=(3, 5))
+    compiled = compile_mod.lower(
+        compile_mod.program(compile_mod.synthesize(m), method="reck"))
+    x = np.random.default_rng(6).normal(size=(4, 5)).astype(np.float32)
+    got = np.asarray(compiled.apply(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.abs(x @ m.T), atol=1e-4)
+
+
+def test_lower_rejects_unprogrammed_program():
+    prog = compile_mod.synthesize(np.ones((4, 4)))
+    with pytest.raises(ValueError):
+        compile_mod.lower(prog)
+
+
+def test_compiled_programs_survive_pack_cache_eviction():
+    """A CompiledProgram carries its own emitted tensors (``packed=``), so
+    serving many programs round-robin — more than the shared pack cache
+    holds — still never repacks."""
+    rng = np.random.default_rng(9)
+    programs, mats = [], []
+    for i in range(10):   # > _NETWORK_PACK_CACHE maxsize (8)
+        m = rng.normal(size=(2, 2))
+        mats.append(m)
+        programs.append(compile_mod.lower(
+            compile_mod.program(compile_mod.synthesize(m), method="reck")))
+    packs = ops.PACK_EVENTS["rfnn_network"]
+    x = jnp.asarray(rng.normal(size=(3, 2)), jnp.float32)
+    for _ in range(2):
+        for m, comp in zip(mats, programs):
+            np.testing.assert_allclose(np.asarray(comp.apply(x)),
+                                       np.abs(np.asarray(x) @ m.T),
+                                       atol=1e-4)
+    assert ops.PACK_EVENTS["rfnn_network"] == packs  # zero repacking
+
+
+# ---------------------------------------------------------------------------
+# the repointed legacy surfaces
+# ---------------------------------------------------------------------------
+
+def test_synthesized_matrix_apply_routes_through_kernels():
+    """core.svd_synthesis is now a facade: apply = two kernel mesh sweeps,
+    no pure-jnp reference chain left."""
+    from repro.core import svd_synthesis
+
+    m = np.random.default_rng(7).normal(size=(4, 4))
+    syn = svd_synthesis.synthesize(m)
+    before = ops.KERNEL_PATH_CALLS["mesh_apply"]
+    assert svd_synthesis.synthesis_error(m, syn) < 1e-4
+    assert ops.KERNEL_PATH_CALLS["mesh_apply"] == before + 2  # V and U
+
+
+# ---------------------------------------------------------------------------
+# serving a compiled program
+# ---------------------------------------------------------------------------
+
+def test_serving_compiled_program_zero_packing(two_layer):
+    from repro.serving import AnalogRequest, AnalogTickBatcher
+
+    mats, prog = two_layer
+    compiled = compile_mod.lower(prog)
+    batcher = AnalogTickBatcher(compiled, slots=3)
+    packs = ops.PACK_EVENTS["rfnn_network"]
+    rng = np.random.default_rng(8)
+    for round_ in range(3):
+        reqs = [AnalogRequest(rid=i,
+                              features=rng.normal(size=8).astype(np.float32))
+                for i in range(7)]
+        for r in reqs:
+            batcher.submit(r)
+        batcher.run()
+        assert all(r.done for r in reqs)
+        for r in reqs:
+            want = np.abs(np.abs(r.features @ mats[0].T) @ mats[1].T)
+            np.testing.assert_allclose(r.result, want, atol=1e-4)
+    # the program was packed at lower time; serving never packs — first
+    # tick included
+    assert ops.PACK_EVENTS["rfnn_network"] == packs
+
+
+# ---------------------------------------------------------------------------
+# the end-to-end MNIST digital->analog transfer (acceptance scenario)
+# ---------------------------------------------------------------------------
+
+def test_mnist_digital_to_analog_transfer_on_megakernel():
+    """4-layer 8x8 stack: train digital, compile every layer, serve on the
+    network megakernel.  The float transfer is exact (no accuracy drop)
+    and every analog evaluation is a megakernel call — KERNEL_PATH_CALLS
+    pins that there is no reference fallback."""
+    from repro.data import load_digits
+    from repro.paper.mnist_rfnn import digital_to_analog_transfer
+
+    x_tr, y_tr, x_te, y_te = load_digits(n_train=400, n_test=150, seed=0)
+    settings = ("float", "uniform6")
+    calls = ops.KERNEL_PATH_CALLS["rfnn_network"]
+    res = digital_to_analog_transfer(
+        x_tr, y_tr, x_te, y_te, depth=4, epochs=12, settings=settings)
+    assert ops.KERNEL_PATH_CALLS["rfnn_network"] - calls == len(settings)
+    f = res["settings"]["float"]
+    assert f["synthesis_error"] < 1e-4
+    assert abs(f["acc_drop"]) <= 0.01  # float transfer is (near-)exact
+    assert res["compiled"]["float"].depth == 4
+    # quantized deployment degrades synthesis but still serves end to end
+    assert res["settings"]["uniform6"]["synthesis_error"] > f["synthesis_error"]

@@ -1,0 +1,155 @@
+"""Quantization codebook edge cases + the quantize->calibrate round trip.
+
+Satellite coverage for the analog program compiler: circular phase
+distance at the 0/2pi boundary (both codebooks), the two quantize-pass
+modes, and the bound that hardware-in-the-loop calibration recovers
+synthesis error introduced by codebook snapping / device imperfections.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro import compile as compile_mod
+from repro.core import quantize as q_lib
+
+jax.config.update("jax_platform_name", "cpu")
+
+TWO_PI = 2 * np.pi
+
+
+# ---------------------------------------------------------------------------
+# nearest_code circular wrap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codebook", ["table1", "uniform3"])
+def test_nearest_code_wraps_at_two_pi(codebook):
+    """Phases just below 2pi must snap to the codebook's *small* phases
+    when those are circularly closer — linear distance would pick the
+    largest code instead."""
+    cb = compile_mod.resolve_codebook(codebook)
+    lo = int(jnp.argmin(cb))
+    phase = jnp.asarray([TWO_PI - 0.05])
+    # circularly, 2pi - 0.05 is within 0.05 + min(cb) of the smallest code
+    assert int(q_lib.nearest_code(phase, cb)[0]) == lo
+    # and slightly negative phases likewise wrap to the small codes
+    assert int(q_lib.nearest_code(jnp.asarray([-0.05]), cb)[0]) == lo
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_nearest_code_invariant_under_two_pi_shift(seed):
+    for codebook in ("table1", "uniform4"):
+        cb = compile_mod.resolve_codebook(codebook)
+        rng = np.random.default_rng(seed)
+        phases = jnp.asarray(rng.uniform(-TWO_PI, 2 * TWO_PI, size=16),
+                             jnp.float32)
+        base = q_lib.nearest_code(phases, cb)
+        np.testing.assert_array_equal(
+            np.asarray(q_lib.nearest_code(phases + TWO_PI, cb)),
+            np.asarray(base))
+        np.testing.assert_array_equal(
+            np.asarray(q_lib.nearest_code(phases - TWO_PI, cb)),
+            np.asarray(base))
+
+
+def test_nearest_code_exact_codebook_values_roundtrip():
+    for name in ("table1", "uniform6"):
+        cb = compile_mod.resolve_codebook(name)
+        codes = q_lib.nearest_code(cb, cb)
+        np.testing.assert_array_equal(np.asarray(codes),
+                                      np.arange(cb.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# quantize pass modes
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def programmed():
+    m = np.random.default_rng(0).normal(size=(4, 4))
+    return compile_mod.program(compile_mod.synthesize(m), method="reck")
+
+
+def test_quantize_nearest_stores_snapped_params(programmed):
+    q = compile_mod.quantize(programmed, "uniform6", mode="nearest")
+    la = q.layers[0]
+    cb = la.codebook
+    for params, codes in ((la.v_params, la.v_codes),
+                          (la.u_params, la.u_codes)):
+        for k, v in codes.items():
+            np.testing.assert_allclose(
+                np.asarray(params[k]),
+                np.asarray(q_lib.codes_to_phase(v, cb)), atol=1e-6)
+    # snapping is idempotent: the device view equals the stored params
+    np.testing.assert_allclose(np.asarray(la.device_params("v")["theta"]),
+                               np.asarray(la.v_params["theta"]), atol=1e-6)
+
+
+def test_quantize_ste_keeps_continuous_masters(programmed):
+    q = compile_mod.quantize(programmed, "table1", mode="ste")
+    la = q.layers[0]
+    # masters untouched ...
+    np.testing.assert_allclose(
+        np.asarray(la.v_params["theta"]),
+        np.asarray(programmed.layers[0].v_params["theta"]))
+    # ... but the device boundary snaps
+    dev = la.device_params("v")["theta"]
+    snapped = q_lib.codes_to_phase(
+        q_lib.nearest_code(la.v_params["theta"], la.codebook), la.codebook)
+    np.testing.assert_allclose(np.asarray(dev), np.asarray(snapped))
+
+
+# ---------------------------------------------------------------------------
+# quantize -> calibrate round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codebook,min_gain", [("table1", 0.5),
+                                               ("uniform6", 0.05)])
+def test_quantize_calibrate_round_trip_bound(programmed, codebook, min_gain):
+    """Calibration must recover a chunk of the quantization-induced
+    synthesis error — and can never end worse than its input (the
+    best-iterate guard evaluates the uncalibrated program first)."""
+    q = compile_mod.quantize(programmed, codebook, mode="nearest")
+    err_q = compile_mod.program_error(q)
+    err_0 = compile_mod.program_error(programmed)
+    assert err_q > err_0  # snapping really did cost accuracy
+    cal = compile_mod.calibrate(q, None, steps=250, lr=0.02)
+    err_c = compile_mod.program_error(cal)
+    assert err_c <= err_q * (1.0 - min_gain)
+
+
+def test_hardware_calibration_recovers_error(programmed):
+    """Hardware-in-the-loop residual fit against the measured prototype."""
+    from repro.paper.prototype import PROTOTYPE
+
+    key = jax.random.PRNGKey(0)
+    bound = compile_mod.calibrate(programmed, PROTOTYPE, key=key, steps=0)
+    err_uncal = compile_mod.program_error(bound)
+    cal = compile_mod.calibrate(programmed, PROTOTYPE, key=key, steps=200)
+    err_cal = compile_mod.program_error(cal)
+    assert err_cal < 0.3 * err_uncal
+
+
+def test_calibrated_draw_parity_with_reference(programmed):
+    """The bound noise keys are consumed exactly like the reference
+    ``apply_mesh_hw`` path: the kernel-realized matrix of a calibrated
+    layer matches the pure-jnp hardware chain draw-for-draw."""
+    from repro.core import hardware as hw_lib
+    from repro.paper.prototype import PROTOTYPE
+
+    cal = compile_mod.calibrate(programmed, PROTOTYPE,
+                                key=jax.random.PRNGKey(3), steps=20)
+    la = cal.layers[0]
+    got = compile_mod.layer_matrix(la)
+    probes = jnp.eye(la.n, dtype=jnp.complex64)
+    h = hw_lib.apply_mesh_hw(la.v_plan, la.device_params("v"), probes,
+                             PROTOTYPE, la.key_v)
+    h = h * la.attenuation.astype(jnp.complex64)
+    h = hw_lib.apply_mesh_hw(la.u_plan, la.device_params("u"), h,
+                             PROTOTYPE, la.key_u)
+    want = np.asarray(jnp.asarray(la.scale, jnp.complex64) * h).T
+    np.testing.assert_allclose(got, want[: la.out_dim, : la.in_dim],
+                               atol=1e-5)
