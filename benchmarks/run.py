@@ -30,6 +30,39 @@ _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_JSON = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
 
 
+def _git_sha() -> str | None:
+    """Commit the benchmarked tree came from, so uploaded ``BENCH_*.json``
+    artifacts are traceable in the trajectory diff.  Prefers the CI-pinned
+    ``GITHUB_SHA`` (checkouts can be detached/shallow), falls back to
+    ``git rev-parse``; ``None`` when neither is available (tarball)."""
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        import subprocess
+
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def _run_context() -> dict:
+    """CI / pytest provenance for the JSON header (empty values dropped)."""
+    ctx = {
+        "ci": os.environ.get("CI"),
+        "github_run_id": os.environ.get("GITHUB_RUN_ID"),
+        "github_run_attempt": os.environ.get("GITHUB_RUN_ATTEMPT"),
+        "github_workflow": os.environ.get("GITHUB_WORKFLOW"),
+        "github_job": os.environ.get("GITHUB_JOB"),
+        "github_ref": os.environ.get("GITHUB_REF"),
+        "pytest": os.environ.get("PYTEST_CURRENT_TEST"),
+    }
+    return {k: v for k, v in ctx.items() if v}
+
+
 def _parse_row(line: str) -> dict:
     name, us, derived = line.split(",", 2)
     entry: dict = {"name": name, "derived": derived}
@@ -91,6 +124,8 @@ def main(argv=None) -> int:
         doc = {
             "schema": 1,
             "smoke": SMOKE,
+            "git_sha": _git_sha(),
+            "context": _run_context(),
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "platform": {
                 "python": platform.python_version(),

@@ -9,26 +9,46 @@ pipeline over a small IR:
     prog = calibrate(prog, PROTOTYPE, key=k)   # hardware-in-the-loop trim
     compiled = lower(prog)                 # megakernel tensors, pre-packed
     y = compiled.apply(x)                  # one fused pallas_call
+
+Matrices larger than one mesh take the tiled pipeline (Sec. V scale-up):
+a (To x Ti) grid of tile-sized processors, every pass running per tile,
+lowered onto ONE tile-grid megakernel call:
+
+    tp = synthesize_tiled(w64, tile=16)    # 64x64 -> 4x4 grid of 16x16
+    tp = program_tiled(tp, method="reck")
+    tp = quantize_tiled(tp, "table1")      # per-device codebook snap
+    tp = calibrate_tiled(tp, PROTOTYPE, key=k)  # per-device hardware trim
+    compiled = lower_tiled(tp)
+    y = compiled.apply(x)                  # one fused pallas_call
 """
 
 from repro.compile.passes import (
     calibrate,
+    calibrate_tiled,
     lower,
+    lower_tiled,
     program,
+    program_tiled,
     quantize,
+    quantize_tiled,
     resolve_codebook,
     synthesize,
+    synthesize_tiled,
 )
 from repro.compile.program import (
     AnalogProgram,
     CompiledProgram,
+    CompiledTiledProgram,
     ProgramLayer,
+    TiledAnalogProgram,
     layer_matrix,
     program_error,
 )
 
 __all__ = [
-    "AnalogProgram", "CompiledProgram", "ProgramLayer", "calibrate",
-    "layer_matrix", "lower", "program", "program_error", "quantize",
-    "resolve_codebook", "synthesize",
+    "AnalogProgram", "CompiledProgram", "CompiledTiledProgram",
+    "ProgramLayer", "TiledAnalogProgram", "calibrate", "calibrate_tiled",
+    "layer_matrix", "lower", "lower_tiled", "program", "program_tiled",
+    "program_error", "quantize", "quantize_tiled", "resolve_codebook",
+    "synthesize", "synthesize_tiled",
 ]

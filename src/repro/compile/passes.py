@@ -37,7 +37,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compile.program import AnalogProgram, CompiledProgram, ProgramLayer
+from repro.compile.program import (
+    AnalogProgram,
+    CompiledProgram,
+    CompiledTiledProgram,
+    ProgramLayer,
+    TiledAnalogProgram,
+)
 from repro.core import decompose
 from repro.core import hardware as hw_lib
 from repro.core import mesh as mesh_lib
@@ -417,4 +423,126 @@ def lower(prog: AnalogProgram, *, block_b: int | None = None,
         n=prog.n, in_dim=prog.in_dim, out_dim=prog.out_dim,
         depth=prog.depth, plans=plans, layer_args=layer_args,
         hardware=hardware, net=net, packed=packed,
+        block_b=block_b, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Tiled pipeline: per-tile-SVD programs for matrices larger than one mesh
+# ---------------------------------------------------------------------------
+#
+# The single-matrix pipeline above tops out at one mesh (the prototype's
+# 8x8); the tiled pipeline scales past it the way the paper's Sec. V
+# sketches: split the matrix into a (To x Ti) grid of tile-sized blocks,
+# run the whole per-layer pipeline on every block *independently*
+# (synthesize -> program -> quantize -> calibrate, each tile is its own
+# physical processor with its own codebook snap and hardware trim) and
+# lower the grid onto ONE tile-grid megakernel call — row outputs combine
+# coherently in VMEM, the readout detects after combination.
+
+
+def synthesize_tiled(matrix, tile: int) -> TiledAnalogProgram:
+    """SVD-factor a large matrix into a (To x Ti) grid of tile programs.
+
+    The ``[out, in]`` matrix is zero-padded up to multiples of ``tile``
+    (even, >= 2) and each ``tile x tile`` block becomes a single-layer
+    :class:`ProgramLayer` spec via :func:`synthesize`.  Row sums of the
+    realized tiles reconstruct the full matmul; ``apply`` later truncates
+    the padding back to ``out``.
+    """
+    m = np.asarray(matrix)
+    if m.ndim != 2:
+        raise ValueError(f"need one [out, in] matrix, got shape {m.shape}")
+    if tile < 2 or tile % 2:
+        raise ValueError(f"tile size must be even and >= 2, got {tile}")
+    out_dim, in_dim = m.shape
+    to = -(-out_dim // tile)
+    ti = -(-in_dim // tile)
+    mp = np.zeros((to * tile, ti * tile), m.dtype)
+    mp[:out_dim, :in_dim] = m
+    grid = []
+    for o in range(to):
+        row = []
+        for i in range(ti):
+            block = mp[o * tile:(o + 1) * tile, i * tile:(i + 1) * tile]
+            row.append(synthesize(block, n=tile).layers[0])
+        grid.append(tuple(row))
+    return TiledAnalogProgram(out_dim=out_dim, in_dim=in_dim, tile=tile,
+                              grid=tuple(grid))
+
+
+def program_tiled(tp: TiledAnalogProgram, method: str = "reck",
+                  **kw) -> TiledAnalogProgram:
+    """:func:`program` mapped over every tile (independent meshes)."""
+    return tp.map_tiles(lambda o, i, la: program(
+        AnalogProgram((la,)), method, **kw).layers[0])
+
+
+def quantize_tiled(tp: TiledAnalogProgram, codebook="table1", *,
+                   mode: str = "nearest") -> TiledAnalogProgram:
+    """:func:`quantize` mapped over every tile (per-device codebooks)."""
+    return tp.map_tiles(lambda o, i, la: quantize(
+        AnalogProgram((la,)), codebook, mode=mode).layers[0])
+
+
+def calibrate_tiled(tp: TiledAnalogProgram,
+                    hardware: hw_lib.HardwareModel | None = None, *,
+                    key: Array | None = None, **kw) -> TiledAnalogProgram:
+    """:func:`calibrate` mapped over every tile.
+
+    Each tile is its own physical device: the noise-draw key is folded
+    per grid position (``o * Ti + i``) so every tile freezes an
+    independent draw, and the residual fit trims each tile against its
+    own block target through the imperfect kernel path.
+    """
+    def one(o, i, la):
+        kt = (jax.random.fold_in(key, o * tp.ti + i)
+              if key is not None else None)
+        return calibrate(AnalogProgram((la,)), hardware, key=kt,
+                         **kw).layers[0]
+
+    return tp.map_tiles(one)
+
+
+def lower_tiled(tp: TiledAnalogProgram, *, block_b: int | None = None,
+                interpret: bool | None = None) -> CompiledTiledProgram:
+    """Emit tile-grid kernel inputs; returns a servable
+    :class:`CompiledTiledProgram` whose ``apply`` is ONE ``pallas_call``
+    per direction over the whole (To x Ti) grid.
+
+    Tensors are emitted through ``ops.pack_tile_grid``'s leaf-identity
+    cache — packed exactly once, here — and handed back verbatim on every
+    ``apply``, so serving (every tick, the first included) does zero
+    packing work.
+    """
+    if not tp.programmed:
+        raise ValueError("lower_tiled needs a fully programmed tile grid — "
+                         "run the `program_tiled` pass first")
+    hardwares = {la.hardware for row in tp.grid for la in row}
+    if len(hardwares) > 1:
+        raise ValueError("all tiles must share one hardware binding, got "
+                         f"{hardwares}")
+    hardware = next(iter(hardwares))
+    tile_args, plans = [], []
+    for row in tp.grid:
+        arow, prow = [], []
+        for la in row:
+            args = {
+                "v": la.device_params("v"),
+                "u": la.device_params("u"),
+                "atten": jnp.asarray(la.attenuation, jnp.float32),
+                "scale": jnp.asarray(la.scale, jnp.float32),
+            }
+            if hardware is not None and la.key_v is not None:
+                args["key_v"], args["key_u"] = la.key_v, la.key_u
+            arow.append(args)
+            prow.append((la.v_plan, la.u_plan))
+        tile_args.append(tuple(arow))
+        plans.append(tuple(prow))
+    tile_args, plans = tuple(tile_args), tuple(plans)
+    grid, packed = kernel_ops.pack_tile_grid(tile_args, n=tp.tile,
+                                             plans=plans, hardware=hardware)
+    return CompiledTiledProgram(
+        out_dim=tp.out_dim, in_dim=tp.in_dim, tile=tp.tile,
+        to=tp.to, ti=tp.ti, plans=plans, tile_args=tile_args,
+        hardware=hardware, grid=grid, packed=packed,
         block_b=block_b, interpret=interpret)

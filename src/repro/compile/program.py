@@ -17,6 +17,15 @@ serving kernels.  This module holds the IR those passes transform:
   :class:`~repro.kernels.schedule.NetworkSchedule` plus the stacked
   ``[L, C, 8, P]`` megakernel coefficients, pre-emitted through the pack
   cache so ``apply`` is pure kernel execution with zero packing work.
+* :class:`TiledAnalogProgram` — a (To x Ti) grid of per-tile-SVD
+  :class:`ProgramLayer`\\ s realizing one large matrix as block sums (the
+  paper's Sec. V scale-up story); the per-tile passes
+  (``program_tiled``/``quantize_tiled``/``calibrate_tiled``) map the
+  single-layer pipeline over every tile independently.
+* :class:`CompiledTiledProgram` — the ``lower_tiled`` output: a static
+  :class:`~repro.kernels.schedule.TileGridSchedule` plus the stacked
+  ``[To, Ti, C, 8, P]`` tile-grid tensors; ``apply`` is one tile-grid
+  megakernel call (all To*Ti meshes swept and row-combined in VMEM).
 
 The IR is deliberately host-side (frozen dataclasses, not pytrees): passes
 return new programs, and only ``lower`` touches the device.
@@ -176,6 +185,87 @@ def program_error(prog: AnalogProgram, *, device: bool = True,
 
 
 @dataclasses.dataclass(frozen=True)
+class TiledAnalogProgram:
+    """A (To x Ti) grid of single-layer analog programs for one matrix.
+
+    Each grid entry is a :class:`ProgramLayer` (n = tile, depth 1) whose
+    target is the corresponding tile-sized block of the (zero-padded)
+    ``[out_dim, in_dim]`` matrix; row sums of the realized tile matrices
+    reconstruct the full matmul.  The tiled passes map the per-layer
+    pipeline over the grid, so quantization and hardware calibration run
+    per tile — exactly how a physical grid of 8x8 processors would be
+    trimmed device by device.
+    """
+
+    out_dim: int
+    in_dim: int
+    tile: int
+    grid: tuple[tuple[ProgramLayer, ...], ...]
+
+    def __post_init__(self):
+        if not self.grid or not self.grid[0]:
+            raise ValueError("a TiledAnalogProgram needs at least one tile")
+        ti = len(self.grid[0])
+        if any(len(row) != ti for row in self.grid):
+            raise ValueError("tile grid must be rectangular")
+        if any(la.n != self.tile for row in self.grid for la in row):
+            raise ValueError("every tile must have n == tile "
+                             f"({self.tile}), got "
+                             f"{sorted({la.n for row in self.grid for la in row})}")
+
+    @property
+    def to(self) -> int:
+        return len(self.grid)
+
+    @property
+    def ti(self) -> int:
+        return len(self.grid[0])
+
+    @property
+    def programmed(self) -> bool:
+        return all(la.programmed for row in self.grid for la in row)
+
+    def map_tiles(self, fn) -> "TiledAnalogProgram":
+        """New program with ``fn(o, i, layer)`` applied to every tile."""
+        return dataclasses.replace(self, grid=tuple(
+            tuple(fn(o, i, la) for i, la in enumerate(row))
+            for o, row in enumerate(self.grid)))
+
+    def realized_matrix(self, *, device: bool = True,
+                        with_hardware: bool = True) -> np.ndarray:
+        """The full complex matrix the programmed grid realizes (block
+        sums of :func:`layer_matrix` per tile), truncated to
+        ``[out_dim, in_dim]``."""
+        t = self.tile
+        m = np.zeros((self.to * t, self.ti * t), np.complex128)
+        for o, row in enumerate(self.grid):
+            for i, la in enumerate(row):
+                m[o * t:(o + 1) * t, i * t:(i + 1) * t] = layer_matrix(
+                    la, device=device, with_hardware=with_hardware)
+        return m[: self.out_dim, : self.in_dim]
+
+    def n_cells(self) -> int:
+        return sum(la.v_plan.n_cells + la.u_plan.n_cells
+                   for row in self.grid for la in row if la.programmed)
+
+
+def _prep_input(x: Array, in_dim: int, padded_dim: int) -> Array:
+    """Shared compiled-apply preamble: trailing-dim check, complex64 cast,
+    zero-pad up to the mesh/grid width."""
+    if x.shape[-1] != in_dim:
+        raise ValueError(f"expected trailing dim {in_dim}, got {x.shape}")
+    if jnp.iscomplexobj(x):
+        xc = x.astype(jnp.complex64)
+    else:
+        xc = jnp.asarray(x, jnp.float32).astype(jnp.complex64)
+    pad = padded_dim - in_dim
+    if pad:
+        xc = jnp.concatenate(
+            [xc, jnp.zeros(xc.shape[:-1] + (pad,), xc.dtype)], axis=-1)
+    return xc
+
+
+@dataclasses.dataclass(frozen=True)
 class CompiledProgram:
     """The ``lower`` pass output: megakernel inputs, ready to serve.
 
@@ -207,17 +297,7 @@ class CompiledProgram:
         ``|gamma_l . U_l (D_l (V_l .))|`` with the detected magnitude
         feeding the next layer, exactly the multi-layer microwave ANN.
         """
-        if x.shape[-1] != self.in_dim:
-            raise ValueError(
-                f"expected trailing dim {self.in_dim}, got {x.shape}")
-        if jnp.iscomplexobj(x):
-            xc = x.astype(jnp.complex64)
-        else:
-            xc = jnp.asarray(x, jnp.float32).astype(jnp.complex64)
-        pad = self.n - x.shape[-1]
-        if pad:
-            xc = jnp.concatenate(
-                [xc, jnp.zeros(xc.shape[:-1] + (pad,), xc.dtype)], axis=-1)
+        xc = _prep_input(x, self.in_dim, self.n)
         y = kernel_ops.rfnn_network(
             self.layer_args, xc, n=self.n, plans=self.plans,
             hardware=self.hardware, block_b=self.block_b,
@@ -226,3 +306,48 @@ class CompiledProgram:
 
     def n_cells(self) -> int:
         return sum(vp.n_cells + up.n_cells for vp, up in self.plans)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledTiledProgram:
+    """The ``lower_tiled`` pass output: tile-grid kernel inputs, servable.
+
+    ``grid``/``packed`` are the ``ops.pack_tile_grid`` result emitted at
+    lower time — every ``apply`` hands them straight back to
+    :func:`repro.kernels.ops.tiled_apply` (``packed=``), so serving does
+    **zero** packing work, first tick included, independent of the shared
+    pack cache's eviction policy.  ``tile_args`` (stable parameter leaf
+    identities) is retained as the program's kernel-level parameter view.
+    """
+
+    out_dim: int
+    in_dim: int
+    tile: int
+    to: int
+    ti: int
+    plans: tuple                 # [To][Ti] of (v_plan, u_plan)
+    tile_args: tuple             # [To][Ti] of kernel argument dicts
+    hardware: hw_lib.HardwareModel | None
+    grid: "object"               # TileGridSchedule (static)
+    packed: tuple                # (coef_v [To,Ti,8*,P], coef_u, gains)
+    block_b: int | None = None
+    interpret: bool | None = None
+
+    def apply(self, x: Array) -> Array:
+        """``x[..., in_dim]`` -> detected magnitudes ``[..., out_dim]``.
+
+        One fused tile-grid ``pallas_call``: every input tile sweeps
+        through its row's meshes, rows combine coherently in VMEM, and
+        the detector reads the combined magnitude — the paper's blocked
+        scale-up of the 8x8 processor with zero per-tile launches.
+        """
+        xc = _prep_input(x, self.in_dim, self.ti * self.tile)
+        y = kernel_ops.tiled_apply(
+            self.tile_args, xc, n=self.tile, plans=self.plans,
+            hardware=self.hardware, block_b=self.block_b,
+            interpret=self.interpret, packed=(self.grid, self.packed))
+        return jnp.abs(y)[..., : self.out_dim]
+
+    def n_cells(self) -> int:
+        return sum(vp.n_cells + up.n_cells
+                   for row in self.plans for vp, up in row)

@@ -332,6 +332,15 @@ class TiledAnalogLinear:
     The weight is a (To x Ti) grid of tile_size^2 analog SVD cores; tile
     row outputs are combined coherently (power combiner after matched lines)
     and the readout mode applies after combination.
+
+    With ``backend="pallas"`` the **whole grid** runs as one fused
+    tile-grid megakernel per direction (``repro.kernels.ops.tiled_apply``):
+    every input tile sweeps through its row's meshes and the row combine
+    happens in VMEM, instead of the To*Ti separate mesh applications the
+    double-vmapped reference composition launches.  Packed coefficients
+    are cached per parameter identity, so steady-state inference does zero
+    packing work; gradients flow through the same kernel VJP the per-tile
+    path uses (draw-for-draw, gradient-for-gradient interchangeable).
     """
 
     in_dim: int
@@ -368,21 +377,56 @@ class TiledAnalogLinear:
     def apply(self, params: dict, x: Array, *, key: Array | None = None) -> Array:
         to, ti = self.grid()
         t = self.tile_size
-        xt = x.reshape(x.shape[:-1] + (ti, t))  # [..., Ti, t]
+        if self.backend == "pallas":
+            # one fused tile-grid kernel per direction: all To*Ti meshes
+            # swept and row-combined in VMEM; readout applies after the
+            # combine, on the kernel's complex output (same as reference)
+            tiles = kernel_ops.memoize_by_leaf_ids(
+                ("tiled_analog_args", self), params,
+                lambda: self._tile_args(params))
+            # every tile shares the module's plan pair (init_from_matrix
+            # may have repointed it onto Reck layouts)
+            pair = (self.tile.v_plan, self.tile.u_plan)
+            y = kernel_ops.tiled_apply(tiles, _as_complex(x), n=t,
+                                       plans=((pair,) * ti,) * to)
+        else:
+            xt = x.reshape(x.shape[:-1] + (ti, t))  # [..., Ti, t]
 
-        def one_tile(p, xin):
-            return self.tile.apply(p, xin)
+            def one_tile(p, xin):
+                return self.tile.apply(p, xin)
 
-        # vmap over the input-tile axis, then the output-tile axis.
-        def row(prow):
-            ys = jax.vmap(one_tile, in_axes=(0, -2), out_axes=-2)(prow, xt)
-            return jnp.sum(ys, axis=-2)  # coherent combine over input tiles
+            # vmap over the input-tile axis, then the output-tile axis.
+            def row(prow):
+                ys = jax.vmap(one_tile, in_axes=(0, -2),
+                              out_axes=-2)(prow, xt)
+                return jnp.sum(ys, axis=-2)  # coherent combine over tiles
 
-        y = jax.vmap(row, in_axes=0, out_axes=-2)(params)  # [..., To, t]
-        y = y.reshape(y.shape[:-2] + (self.out_dim,))
+            y = jax.vmap(row, in_axes=0, out_axes=-2)(params)  # [..., To, t]
+            y = y.reshape(y.shape[:-2] + (self.out_dim,))
         if self.hardware is not None and self.output == "abs":
             return hw_lib.detect_magnitude(y, self.hardware, key)
         return _readout(y, self.output, None, None)
+
+    def _tile_args(self, params: dict) -> tuple:
+        """Per-tile kernel argument dicts from the stacked [To, Ti, ...]
+        parameter pytree — the same derivation the reference tile apply
+        performs (quantized phases, sigmoid attenuation, softplus scale),
+        memoized by parameter leaf identity so the downstream pack cache
+        hits in the serving steady state."""
+        to, ti = self.grid()
+        rows = []
+        for o in range(to):
+            row = []
+            for i in range(ti):
+                p = jax.tree.map(lambda a, o=o, i=i: a[o, i], params)
+                row.append({
+                    "v": self.tile._quant(p["v"]),
+                    "u": self.tile._quant(p["u"]),
+                    "atten": jax.nn.sigmoid(p["atten_logit"]),
+                    "scale": jax.nn.softplus(p["log_scale"]),
+                })
+            rows.append(tuple(row))
+        return tuple(rows)
 
     def n_cells(self) -> int:
         to, ti = self.grid()

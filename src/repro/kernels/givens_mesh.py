@@ -29,6 +29,10 @@ Kernels:
     coefficient/parity/gain tensors) in one VMEM residency: inter-layer
     activations never touch HBM, the TPU analogue of the paper's
     end-to-end analog signal path (Sec. V).
+  * ``tilegrid_kernel`` — a (To x Ti) grid of analog tile processors
+    realizing a large blocked matmul (Sec. V scale-up): per grid step one
+    tile row sweeps every input tile and coherently combines the row's
+    outputs in VMEM (matched-line power combiner).
   * ``mesh_bwd_kernel`` / ``rfnn_linear_bwd_kernel`` — the custom VJPs.
     The backward pass re-runs the column sequence *in reverse*, carrying
     two coefficient tensors: the per-cell analytic **2x2 inverse** rebuilds
@@ -291,19 +295,20 @@ def _run_columns_bwd(coef_inv_ref, coef_adj_ref, parity_ref, dcoef_ref,
     """Reversed column sweep: recompute states via the per-cell inverse,
     accumulate coefficient gradients, propagate the cotangent via the
     adjoint.  ``state`` starts at the mesh *output*.  ``layer`` (a static
-    int) selects the leading index of a stacked ``[L, C, 8, P]`` gradient
-    accumulator — the network kernel's per-layer slot."""
+    int, or a static tuple for grid layouts) selects the leading indices
+    of a stacked ``[L, C, 8, P]`` / ``[To, Ti, C, 8, P]`` gradient
+    accumulator — the network kernel's per-layer slot and the tile-grid
+    kernel's per-tile slot."""
     n_cols = coef_inv_ref.shape[0]
+    lead = (() if layer is None
+            else layer if isinstance(layer, tuple) else (layer,))
 
     def body(k, carry):
         c = n_cols - 1 - k
         s, g = carry[0:4], carry[4:8]
         s_in = _column_body(coef_inv_ref, parity_ref, c, s)   # T_c^{-1} s_{c+1}
         grad = _coef_grad(parity_ref, c, s_in, g)
-        if layer is None:
-            dcoef_ref[c] = dcoef_ref[c] + grad
-        else:
-            dcoef_ref[layer, c] = dcoef_ref[layer, c] + grad
+        dcoef_ref[lead + (c,)] = dcoef_ref[lead + (c,)] + grad
         g_in = _column_body(coef_adj_ref, parity_ref, c, g)   # T_c^H g_{c+1}
         return (*s_in, *g_in)
 
@@ -586,25 +591,31 @@ def network_fwd_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
     oo_ref[...] = state[2]
 
 
-def _net_layer_bwd(cv_inv, cv_adj, par_v, cu_inv, cu_adj, par_u, g,
-                   x_in, v, u, goe, goo, dcv_ref, dcu_ref, layer):
-    """Unwind one layer: |detect| -> g2 -> U -> g1 -> V -> g0.
-
-    ``x_in``/``v``/``u`` are the recomputed layer input and stage states;
-    accumulates coefficient gradients into layer slot ``layer`` of the
-    stacked accumulators and returns ``(dgains [12, P], gx planes)``.
-    """
-    # |detect| backward: d|z|/dz = z/|z| (0 at the origin, which also kills
-    # zero-padded batch rows).
+def _detect_bwd(u, g, goe, goo):
+    """|detect| backward: d|z|/dz = z/|z| (0 at the origin, which also
+    kills zero-padded batch rows).  Returns the cotangent of the post-g2
+    complex state ``z = g2 * u``."""
     zer, zei = _cmul(u[0], u[1], g[8], g[9])
     zor, zoi = _cmul(u[2], u[3], g[10], g[11])
     me = jnp.sqrt(zer * zer + zei * zei)
     mo = jnp.sqrt(zor * zor + zoi * zoi)
     inv_e = jnp.where(me > 0, goe / jnp.where(me > 0, me, 1.0), 0.0)
     inv_o = jnp.where(mo > 0, goo / jnp.where(mo > 0, mo, 1.0), 0.0)
-    gzer, gzei = inv_e * zer, inv_e * zei
-    gzor, gzoi = inv_o * zor, inv_o * zoi
+    return inv_e * zer, inv_e * zei, inv_o * zor, inv_o * zoi
 
+
+def _layer_linear_bwd(cv_inv, cv_adj, par_v, cu_inv, cu_adj, par_u, g,
+                      x_in, v, u, gz, dcv_ref, dcu_ref, layer):
+    """Unwind the linear stages g2 -> U -> g1 -> V -> g0 of one layer/tile.
+
+    ``gz`` is the cotangent of the post-g2 complex state (after |detect|
+    backward for the network kernel; the row-sum cotangent directly for
+    the tile-grid kernel, whose combine is linear).  ``x_in``/``v``/``u``
+    are the layer input and stage states; accumulates coefficient
+    gradients into slot ``layer`` (int or tuple) of the stacked
+    accumulators and returns ``(dgains [12, P], gx planes)``.
+    """
+    gzer, gzei, gzor, gzoi = gz
     dg2 = (_conj_dot(u[0], u[1], gzer, gzei)
            + _conj_dot(u[2], u[3], gzor, gzoi))
     guer, guei = _cmul(g[8], -g[9], gzer, gzei)
@@ -629,6 +640,14 @@ def _net_layer_bwd(cv_inv, cv_adj, par_v, cu_inv, cu_adj, par_u, g,
 
     dg = jnp.concatenate(list(dg0) + list(dg1) + list(dg2), axis=0)
     return dg, (gxer, gxei, gxor, gxoi)
+
+
+def _net_layer_bwd(cv_inv, cv_adj, par_v, cu_inv, cu_adj, par_u, g,
+                   x_in, v, u, goe, goo, dcv_ref, dcu_ref, layer):
+    """Unwind one network layer: |detect| -> linear stages (see above)."""
+    gz = _detect_bwd(u, g, goe, goo)
+    return _layer_linear_bwd(cv_inv, cv_adj, par_v, cu_inv, cu_adj, par_u,
+                             g, x_in, v, u, gz, dcv_ref, dcu_ref, layer)
 
 
 def network_bwd_kernel(cv_inv_ref, cv_adj_ref, par_v_ref,
@@ -758,6 +777,245 @@ def network_fwd_pallas_call(n: int, n_layers: int, n_cols: int,
                             + 2 * n_layers * n_cols * 8 * p * 4
                             + n_layers * 12 * p * 4) * n_batch_blocks,
             transcendentals=n_layers * batch_block * p * 2 * n_batch_blocks,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tile-grid megakernel: a (To x Ti) grid of analog tiles in one pallas_call
+# ---------------------------------------------------------------------------
+#
+# A large (To*n) x (Ti*n) matmul as block sums over tile processors: input
+# tile i sweeps through tile (r, i)'s meshes (g0 -> V -> g1 -> U -> g2, the
+# same 12-row gain layout as one network layer, no |detect| — the combine
+# is coherent) and the Ti complex outputs of tile row r are summed in VMEM
+# (matched-line power combiner).  The readout mode (|.|, Re, complex) and
+# detector noise apply *after* combination, outside the kernel.
+#
+# Grid is (To, batch blocks) — batch innermost: one grid step computes one
+# (tile row, batch block) output panel, so a row's coefficient-gradient
+# accumulators are revisited on *consecutive* steps (the same property the
+# 1-D batch grid gives the other kernels).  Planes are [B, Ti, P] in /
+# [B, To, P] out; coefficients/parities/gains stack to [To, Ti, C, 8, P] /
+# [To, Ti, C, 1] / [To, Ti, 12, P] with identity-column padding to the
+# grid-wide C (see ``repro.kernels.schedule.TileGridSchedule``).
+#
+# Residuals follow the per-tile rule: each tile saves its two pre-gain
+# stage boundaries (post-V, post-U) into [To, Ti, B, P] planes — exactly
+# the 8 planes per tile the per-tile composition would have stored — and
+# the backward unwinds every tile from them with the inverse/adjoint
+# sweeps.  The input cotangent is emitted as per-row partials
+# [To, B, Ti, P] (each written once per grid step) and summed outside the
+# kernel: dx_i = sum_r gx_{r,i}, the transpose of the row combine.
+
+
+def _tile_row_fwd(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref, gains_ref,
+                  xer_ref, xei_ref, xor_ref, xoi_ref):
+    """One tile row: sweep every input tile, combine coherently.
+
+    Returns the combined post-g2 planes plus the per-tile (v, u) stage
+    states (the VJP forward's residuals; inference discards them).
+    """
+    n_in = coef_v_ref.shape[1]
+    acc = None
+    stages = []
+    for i in range(n_in):
+        state = (xer_ref[:, i], xei_ref[:, i], xor_ref[:, i], xoi_ref[:, i])
+        g = gains_ref[0, i]
+        v, u = _net_layer_stages(coef_v_ref[0, i], par_v_ref[0, i],
+                                 coef_u_ref[0, i], par_u_ref[0, i], g, state)
+        stages.append((v, u))
+        zer, zei = _cmul(u[0], u[1], g[8], g[9])
+        zor, zoi = _cmul(u[2], u[3], g[10], g[11])
+        z = (zer, zei, zor, zoi)
+        acc = z if acc is None else tuple(a + b for a, b in zip(acc, z))
+    return acc, stages
+
+
+def tilegrid_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref, gains_ref,
+                    xer_ref, xei_ref, xor_ref, xoi_ref,
+                    oer_ref, oei_ref, oor_ref, ooi_ref):
+    """Inference: one (tile row, batch block) combined output per step."""
+    acc, _ = _tile_row_fwd(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
+                           gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref)
+    oer_ref[:, 0], oei_ref[:, 0] = acc[0], acc[1]
+    oor_ref[:, 0], ooi_ref[:, 0] = acc[2], acc[3]
+
+
+def tilegrid_fwd_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
+                        gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
+                        oer_ref, oei_ref, oor_ref, ooi_ref,
+                        sver_ref, svei_ref, svor_ref, svoi_ref,
+                        suer_ref, suei_ref, suor_ref, suoi_ref):
+    """VJP forward: identical sweep, plus every tile's two pre-gain stage
+    boundaries (post-V, post-U) into [To, Ti, B, P] residual planes."""
+    acc, stages = _tile_row_fwd(coef_v_ref, par_v_ref, coef_u_ref,
+                                par_u_ref, gains_ref,
+                                xer_ref, xei_ref, xor_ref, xoi_ref)
+    for i, (v, u) in enumerate(stages):
+        sver_ref[0, i], svei_ref[0, i] = v[0], v[1]
+        svor_ref[0, i], svoi_ref[0, i] = v[2], v[3]
+        suer_ref[0, i], suei_ref[0, i] = u[0], u[1]
+        suor_ref[0, i], suoi_ref[0, i] = u[2], u[3]
+    oer_ref[:, 0], oei_ref[:, 0] = acc[0], acc[1]
+    oor_ref[:, 0], ooi_ref[:, 0] = acc[2], acc[3]
+
+
+def tilegrid_bwd_kernel(cv_inv_ref, cv_adj_ref, par_v_ref,
+                        cu_inv_ref, cu_adj_ref, par_u_ref, gains_ref,
+                        xer_ref, xei_ref, xor_ref, xoi_ref,
+                        sver_ref, svei_ref, svor_ref, svoi_ref,
+                        suer_ref, suei_ref, suor_ref, suoi_ref,
+                        goer_ref, goei_ref, goor_ref, gooi_ref,
+                        dcv_ref, dcu_ref, dg_ref,
+                        dxer_ref, dxei_ref, dxor_ref, dxoi_ref):
+    """Unwind one tile row from the saved stage boundaries.
+
+    The row combine is a sum, so every tile of the row sees the same
+    output cotangent; each tile unwinds g2 -> U -> g1 -> V -> g0 with the
+    inverse/adjoint sweeps, accumulating into its (row, tile) slot of the
+    stacked coefficient/gain accumulators (revisited across the inner
+    batch grid).  Input cotangents land in the per-row partial planes.
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        dcv_ref[...] = jnp.zeros(dcv_ref.shape, dcv_ref.dtype)
+        dcu_ref[...] = jnp.zeros(dcu_ref.shape, dcu_ref.dtype)
+        dg_ref[...] = jnp.zeros(dg_ref.shape, dg_ref.dtype)
+
+    gz = (goer_ref[:, 0], goei_ref[:, 0], goor_ref[:, 0], gooi_ref[:, 0])
+    n_in = cv_inv_ref.shape[1]
+    for i in range(n_in):
+        g = gains_ref[0, i]
+        x_in = (xer_ref[:, i], xei_ref[:, i], xor_ref[:, i], xoi_ref[:, i])
+        v = (sver_ref[0, i], svei_ref[0, i], svor_ref[0, i], svoi_ref[0, i])
+        u = (suer_ref[0, i], suei_ref[0, i], suor_ref[0, i], suoi_ref[0, i])
+        dg, gx = _layer_linear_bwd(
+            cv_inv_ref[0, i], cv_adj_ref[0, i], par_v_ref[0, i],
+            cu_inv_ref[0, i], cu_adj_ref[0, i], par_u_ref[0, i],
+            g, x_in, v, u, gz, dcv_ref, dcu_ref, (0, i))
+        dg_ref[0, i] = dg_ref[0, i] + dg
+        dxer_ref[0, :, i], dxei_ref[0, :, i] = gx[0], gx[1]
+        dxor_ref[0, :, i], dxoi_ref[0, :, i] = gx[2], gx[3]
+
+
+def _grid_coef_spec(ti: int, n_cols: int, p: int):
+    return pl.BlockSpec((1, ti, n_cols, 8, p), lambda r, b: (r, 0, 0, 0, 0))
+
+
+def _grid_parity_spec(ti: int, n_cols: int):
+    return pl.BlockSpec((1, ti, n_cols, 1), lambda r, b: (r, 0, 0, 0))
+
+
+def _grid_gains_spec(ti: int, p: int):
+    return pl.BlockSpec((1, ti, 12, p), lambda r, b: (r, 0, 0, 0))
+
+
+def _grid_flops_per_block(n: int, ti: int, n_cols: int,
+                          batch_block: int) -> int:
+    p = n // 2
+    return 2 * ti * (2 * n_cols * p * 16 + 9 * n) * batch_block
+
+
+def tilegrid_pallas_call(n: int, to: int, ti: int, n_cols: int,
+                         batch_block: int, n_batch_blocks: int,
+                         interpret: bool):
+    p = n // 2
+    b_total = n_batch_blocks * batch_block
+    x_plane = pl.BlockSpec((batch_block, ti, p), lambda r, b: (b, 0, 0))
+    o_plane = pl.BlockSpec((batch_block, 1, p), lambda r, b: (b, r, 0))
+    out_shape = [jax.ShapeDtypeStruct((b_total, to, p), jnp.float32)] * 4
+    flops = _grid_flops_per_block(n, ti, n_cols, batch_block)
+    return pl.pallas_call(
+        tilegrid_kernel,
+        grid=(to, n_batch_blocks),
+        in_specs=[_grid_coef_spec(ti, n_cols, p),
+                  _grid_parity_spec(ti, n_cols),
+                  _grid_coef_spec(ti, n_cols, p),
+                  _grid_parity_spec(ti, n_cols),
+                  _grid_gains_spec(ti, p),
+                  x_plane, x_plane, x_plane, x_plane],
+        out_specs=[o_plane] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops * to * n_batch_blocks,
+            bytes_accessed=((4 * ti + 4) * batch_block * p * 4
+                            + 2 * ti * n_cols * 8 * p * 4
+                            + ti * 12 * p * 4) * to * n_batch_blocks,
+            transcendentals=0,
+        ),
+    )
+
+
+def tilegrid_fwd_pallas_call(n: int, to: int, ti: int, n_cols: int,
+                             batch_block: int, n_batch_blocks: int,
+                             interpret: bool):
+    p = n // 2
+    b_total = n_batch_blocks * batch_block
+    x_plane = pl.BlockSpec((batch_block, ti, p), lambda r, b: (b, 0, 0))
+    o_plane = pl.BlockSpec((batch_block, 1, p), lambda r, b: (b, r, 0))
+    stage = pl.BlockSpec((1, ti, batch_block, p), lambda r, b: (r, 0, b, 0))
+    out_shape = (
+        [jax.ShapeDtypeStruct((b_total, to, p), jnp.float32)] * 4
+        + [jax.ShapeDtypeStruct((to, ti, b_total, p), jnp.float32)] * 8)
+    flops = _grid_flops_per_block(n, ti, n_cols, batch_block)
+    return pl.pallas_call(
+        tilegrid_fwd_kernel,
+        grid=(to, n_batch_blocks),
+        in_specs=[_grid_coef_spec(ti, n_cols, p),
+                  _grid_parity_spec(ti, n_cols),
+                  _grid_coef_spec(ti, n_cols, p),
+                  _grid_parity_spec(ti, n_cols),
+                  _grid_gains_spec(ti, p),
+                  x_plane, x_plane, x_plane, x_plane],
+        out_specs=[o_plane] * 4 + [stage] * 8,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops * to * n_batch_blocks,
+            bytes_accessed=((12 * ti + 4) * batch_block * p * 4
+                            + 2 * ti * n_cols * 8 * p * 4
+                            + ti * 12 * p * 4) * to * n_batch_blocks,
+            transcendentals=0,
+        ),
+    )
+
+
+def tilegrid_bwd_pallas_call(n: int, to: int, ti: int, n_cols: int,
+                             batch_block: int, n_batch_blocks: int,
+                             interpret: bool):
+    p = n // 2
+    b_total = n_batch_blocks * batch_block
+    x_plane = pl.BlockSpec((batch_block, ti, p), lambda r, b: (b, 0, 0))
+    o_plane = pl.BlockSpec((batch_block, 1, p), lambda r, b: (b, r, 0))
+    stage = pl.BlockSpec((1, ti, batch_block, p), lambda r, b: (r, 0, b, 0))
+    dx_part = pl.BlockSpec((1, batch_block, ti, p), lambda r, b: (r, b, 0, 0))
+    out_shape = (
+        [jax.ShapeDtypeStruct((to, ti, n_cols, 8, p), jnp.float32)] * 2
+        + [jax.ShapeDtypeStruct((to, ti, 12, p), jnp.float32)]
+        + [jax.ShapeDtypeStruct((to, b_total, ti, p), jnp.float32)] * 4)
+    # inverse state recompute + adjoint cotangent + coefficient grads
+    flops = 3 * _grid_flops_per_block(n, ti, n_cols, batch_block)
+    return pl.pallas_call(
+        tilegrid_bwd_kernel,
+        grid=(to, n_batch_blocks),
+        in_specs=[_grid_coef_spec(ti, n_cols, p)] * 2
+        + [_grid_parity_spec(ti, n_cols)]
+        + [_grid_coef_spec(ti, n_cols, p)] * 2
+        + [_grid_parity_spec(ti, n_cols), _grid_gains_spec(ti, p),
+           x_plane, x_plane, x_plane, x_plane]
+        + [stage] * 8 + [o_plane] * 4,
+        out_specs=[_grid_coef_spec(ti, n_cols, p)] * 2
+        + [_grid_gains_spec(ti, p)] + [dx_part] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=flops * to * n_batch_blocks,
+            bytes_accessed=((16 * ti + 4) * batch_block * p * 4
+                            + 6 * ti * n_cols * 8 * p * 4
+                            + 2 * ti * 12 * p * 4) * to * n_batch_blocks,
+            transcendentals=0,
         ),
     )
 

@@ -40,6 +40,8 @@ from repro.kernels.schedule import (
     pad_columns,
     parity_array,
     schedule_from_plan,
+    tile_grid_parity_arrays,
+    tile_grid_schedule,
 )
 
 Array = jax.Array
@@ -49,17 +51,18 @@ Array = jax.Array
 #: silent reference fallback left to fall into).  Counts tick on every
 #: public-wrapper call (trace time under an outer jit).
 KERNEL_PATH_CALLS = {"mesh_apply": 0, "rfnn_linear": 0, "mesh_apply_cells": 0,
-                     "rfnn_network": 0}
+                     "rfnn_network": 0, "tiled_apply": 0}
 
 #: Instrumentation: number of times each jitted impl was actually *traced*.
 #: Regression tests use this to pin the schedule/trace-cache memoization —
 #: structurally equal plans must not re-trigger traces.
-TRACE_COUNTS = {"mesh_apply": 0, "rfnn_linear": 0, "rfnn_network": 0}
+TRACE_COUNTS = {"mesh_apply": 0, "rfnn_linear": 0, "rfnn_network": 0,
+                "tiled_apply": 0}
 
 #: Instrumentation: number of coefficient-pack builds actually executed by
 #: :func:`rfnn_network` (cache misses / tracer bypasses).  Steady-state
 #: serving must not tick this.
-PACK_EVENTS = {"rfnn_network": 0}
+PACK_EVENTS = {"rfnn_network": 0, "tiled_apply": 0}
 
 
 def _default_interpret() -> bool:
@@ -571,3 +574,175 @@ def rfnn_network(layers, x: Array, *, n: int,
         packed = pack_network(layers, n=n, plans=plans, hardware=hardware)
     net, tensors = packed
     return _rfnn_network_apply_impl(net, block_b, interpret, *tensors, x)
+
+
+# ---------------------------------------------------------------------------
+# Tile-grid megakernel: a (To x Ti) grid of analog tiles in one fused sweep
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _tilegrid_planes(grid, block_b, nb, interpret, coef_v, coef_u, gains,
+                     xer, xei, xor, xoi):
+    call = givens_mesh.tilegrid_pallas_call(
+        grid.n, grid.to, grid.ti, grid.n_columns, block_b, nb, interpret)
+    pv, pu = tile_grid_parity_arrays(grid)
+    return tuple(call(coef_v, pv, coef_u, pu, gains, xer, xei, xor, xoi))
+
+
+def _tilegrid_planes_fwd(grid, block_b, nb, interpret, coef_v, coef_u, gains,
+                         xer, xei, xor, xoi):
+    call = givens_mesh.tilegrid_fwd_pallas_call(
+        grid.n, grid.to, grid.ti, grid.n_columns, block_b, nb, interpret)
+    pv, pu = tile_grid_parity_arrays(grid)
+    oer, oei, oor, ooi, *stages = call(coef_v, pv, coef_u, pu, gains,
+                                       xer, xei, xor, xoi)
+    # residuals: coefficients/gains + the input planes + every tile's two
+    # pre-gain stage boundaries — everything inside a mesh is recomputed
+    # by the reversed inverse sweep, same rule as the other kernels
+    return (oer, oei, oor, ooi), (coef_v, coef_u, gains,
+                                  (xer, xei, xor, xoi), tuple(stages))
+
+
+def _tilegrid_planes_bwd(grid, block_b, nb, interpret, res, cot):
+    coef_v, coef_u, gains, xplanes, stages = res
+    call = givens_mesh.tilegrid_bwd_pallas_call(
+        grid.n, grid.to, grid.ti, grid.n_columns, block_b, nb, interpret)
+    pv, pu = tile_grid_parity_arrays(grid)
+    dcv, dcu, dg, dxer, dxei, dxor, dxoi = call(
+        givens_mesh.inverse_coefficients(coef_v),
+        givens_mesh.adjoint_coefficients(coef_v), pv,
+        givens_mesh.inverse_coefficients(coef_u),
+        givens_mesh.adjoint_coefficients(coef_u), pu,
+        gains, *xplanes, *stages, *cot)
+    # dx arrives as per-row partials [To, B, Ti, P] (each grid step writes
+    # its own slab); the sum over rows is the transpose of the combine
+    return (dcv, dcu, dg, jnp.sum(dxer, axis=0), jnp.sum(dxei, axis=0),
+            jnp.sum(dxor, axis=0), jnp.sum(dxoi, axis=0))
+
+
+_tilegrid_planes.defvjp(_tilegrid_planes_fwd, _tilegrid_planes_bwd)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _pack_tile_grid_impl(grid, hardware, tiles):
+    """Stacked [To, Ti, C, 8, P] coefficients + [To, Ti, 12, P] gains for
+    the tile-grid kernel, identity-padded to the grid's common column
+    count.  Per-tile gains reuse the network layer layout (g0 input
+    screens, g1 attenuation + folded mid screens, g2 digital scale +
+    output screen)."""
+    c = grid.n_columns
+    coef_v, coef_u, gains = [], [], []
+    for srow, trow in zip(grid.tiles, tiles):
+        cv_row, cu_row, g_row = [], [], []
+        for (sv, su), ta in zip(srow, trow):
+            cv_row.append(pad_columns(
+                _mesh_coefficients(sv, ta["v"], hardware, ta.get("key_v")),
+                c))
+            cu_row.append(pad_columns(
+                _mesh_coefficients(su, ta["u"], hardware, ta.get("key_u")),
+                c))
+            g_row.append(_layer_gains(grid.n, ta))
+        coef_v.append(jnp.stack(cv_row))
+        coef_u.append(jnp.stack(cu_row))
+        gains.append(jnp.stack(g_row))
+    return (jnp.stack(coef_v), jnp.stack(coef_u), jnp.stack(gains))
+
+
+_TILEGRID_PACK_CACHE = _LeafIdCache(maxsize=8)
+
+
+def pack_tile_grid(tiles, *, n: int, plans=None,
+                   hardware: hw_lib.HardwareModel | None = None):
+    """Emit the tile-grid kernel inputs for a (To x Ti) grid of tiles.
+
+    ``tiles``: nested ``[To][Ti]`` sequence of per-tile dicts with keys
+    ``v``/``u`` (mesh params, optional ``alpha_in``/``alpha`` screens),
+    ``atten`` ([n] diagonal), optional ``scale`` (digital gamma) and, with
+    ``hardware``, optional ``key_v``/``key_u`` phase-noise keys — the same
+    argument shape one :func:`rfnn_network` layer consumes.  Returns
+    ``(grid, (coef_v, coef_u, gains))`` ready for :func:`tiled_apply`'s
+    ``packed=``.  Results go through the tile-grid leaf-identity pack
+    cache (``PACK_EVENTS["tiled_apply"]``): repeat calls with the same
+    (immutable) tile arrays do zero packing work; tracers bypass so
+    gradients flow through packing.
+    """
+    tiles = tuple(tuple(row) for row in tiles)
+    grid = tile_grid_schedule(n, len(tiles), len(tiles[0]), plans)
+
+    def build():
+        PACK_EVENTS["tiled_apply"] += 1
+        return _pack_tile_grid_impl(grid, hardware, tiles)
+
+    if _contains_tracer(tiles):
+        return grid, build()
+    return grid, _TILEGRID_PACK_CACHE.get_or_build(
+        (grid, hardware), tiles, build)
+
+
+def _tilegrid_auto_block(b: int, block_b: int | None, n: int,
+                         ti: int) -> int:
+    """Batch block for the tile-grid kernel: ``None`` sizes the block so
+    the resident planes — 8 stage-residual planes per input tile plus the
+    4 x Ti input and working planes — fit the VMEM target, like the
+    network kernel's auto-blocking."""
+    if block_b is None:
+        per_row = (12 * ti + 8) * (n // 2) * 4
+        block_b = max(8, min(1024, _NETWORK_VMEM_TARGET // per_row))
+    return _auto_block(b, block_b)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _tiled_apply_impl(grid, block_b, interpret, coef_v, coef_u, gains, x):
+    TRACE_COUNTS["tiled_apply"] += 1  # python side effect: trace time only
+    n, to, ti = grid.n, grid.to, grid.ti
+    batch_shape = x.shape[:-1]
+    xt = x.reshape((-1, ti, n)).astype(jnp.complex64)
+    bb = _tilegrid_auto_block(xt.shape[0], block_b, n, ti)
+    xt, b_orig = _pad_batch(xt, bb)
+    nb = xt.shape[0] // bb
+    xe, xo = xt[..., 0::2], xt[..., 1::2]          # [B, Ti, P] per plane
+    planes = (jnp.real(xe).astype(jnp.float32),
+              jnp.imag(xe).astype(jnp.float32),
+              jnp.real(xo).astype(jnp.float32),
+              jnp.imag(xo).astype(jnp.float32))
+    oer, oei, oor, ooi = _tilegrid_planes(grid, bb, nb, interpret,
+                                          coef_v, coef_u, gains, *planes)
+    ye = oer + 1j * oei                            # [B, To, P]
+    yo = oor + 1j * ooi
+    y = jnp.stack([ye, yo], axis=-1).reshape((-1, to * n))[:b_orig]
+    return y.astype(jnp.complex64).reshape(batch_shape + (to * n,))
+
+
+def tiled_apply(tiles, x: Array, *, n: int, plans=None,
+                hardware: hw_lib.HardwareModel | None = None,
+                block_b: int | None = None,
+                interpret: bool | None = None, packed=None) -> Array:
+    """A (To x Ti) tile-grid matmul ``sum_i gamma U(D(V x_i))`` per row,
+    in ONE ``pallas_call`` per direction.
+
+    ``tiles``/``plans``/``hardware``: see :func:`pack_tile_grid`.  ``x``
+    is ``[..., Ti*n]`` and the result is the **complex** combined row
+    output ``[..., To*n]`` — the matched-line power combiner sums the Ti
+    tile outputs of each row coherently in VMEM, and the readout mode
+    (|.| detection, real part) plus detector noise compose on top,
+    outside the kernel (they are ordinary JAX and differentiate
+    natively).  The custom VJP unwinds every tile from the same saved
+    stage boundaries the per-tile composition stores (post-V/post-U per
+    tile), so training matches the per-tile path gradient-for-gradient
+    with zero per-tile kernel launches.
+
+    ``packed``: an explicit :func:`pack_tile_grid` result — offline
+    compilation (``repro.compile.lower_tiled``) hands it back here and
+    skips the pack/cache lookup entirely.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    KERNEL_PATH_CALLS["tiled_apply"] += 1
+    if packed is None:
+        packed = pack_tile_grid(tiles, n=n, plans=plans, hardware=hardware)
+    grid, tensors = packed
+    if x.shape[-1] != grid.ti * grid.n:
+        raise ValueError(
+            f"expected trailing dim {grid.ti * grid.n} "
+            f"(Ti={grid.ti} tiles of n={grid.n}), got {x.shape}")
+    return _tiled_apply_impl(grid, block_b, interpret, *tensors, x)

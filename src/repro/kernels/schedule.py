@@ -258,6 +258,120 @@ def network_parity_arrays(net: NetworkSchedule) -> tuple[Array, Array]:
     return jnp.asarray(pv), jnp.asarray(pu)
 
 
+# ---------------------------------------------------------------------------
+# Tile-grid schedules: a (To x Ti) grid of per-tile (V, U) schedules for the
+# tile-grid megakernel (one pallas_call for a large blocked matmul)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileGridSchedule:
+    """Static schedule of a (To x Ti) grid of analog tile processors.
+
+    Each grid entry is a ``(V, U)`` pair of :class:`MeshSchedule`\\ s over
+    the tile channel count ``n`` — one tile realizes one ``n x n`` block
+    of a large matrix in SVD mesh form (V-mesh -> diag -> U-mesh -> digital
+    scale).  The tile-grid kernel runs an entire tile *row* per grid step:
+    every input tile is swept through its meshes and the row's outputs are
+    coherently summed in VMEM (the matched-line power-combiner), so a
+    ``(To*n) x (Ti*n)`` matmul is one ``pallas_call`` instead of ``To*Ti``
+    separate mesh applications.  Coefficient/parity tensors are stacked to
+    ``[To, Ti, C, 8, P]`` / ``[To, Ti, C, 1]`` with ``C`` the max column
+    count over every mesh in the grid (identity-column padding, exact
+    no-ops in the sweep).  Hashable and purely static — a jit/static and
+    ``custom_vjp`` nondiff argument like :class:`NetworkSchedule`.
+    """
+
+    tiles: tuple[tuple[tuple[MeshSchedule, MeshSchedule], ...], ...]
+
+    def __post_init__(self):
+        if not self.tiles or not self.tiles[0]:
+            raise ValueError("tile grid needs at least one tile")
+        ti = len(self.tiles[0])
+        if any(len(row) != ti for row in self.tiles):
+            raise ValueError("tile grid must be rectangular")
+        n = self.tiles[0][0][0].n
+        for row in self.tiles:
+            for sv, su in row:
+                if sv.n != n or su.n != n:
+                    raise ValueError(
+                        f"all tile meshes must share n={n}, got "
+                        f"({sv.n}, {su.n})")
+
+    @property
+    def n(self) -> int:
+        return self.tiles[0][0][0].n
+
+    @property
+    def pairs(self) -> int:
+        return self.n // 2
+
+    @property
+    def to(self) -> int:
+        return len(self.tiles)
+
+    @property
+    def ti(self) -> int:
+        return len(self.tiles[0])
+
+    @property
+    def n_columns(self) -> int:
+        return max(max(sv.n_columns, su.n_columns)
+                   for row in self.tiles for sv, su in row)
+
+
+def tile_grid_schedule(n: int, to: int, ti: int,
+                       plans=None) -> TileGridSchedule:
+    """Build a TileGridSchedule for a (to x ti) grid of n-channel tiles.
+
+    ``plans``: optional ``[to][ti]`` nested sequence of per-tile
+    ``(v_plan, u_plan)`` pairs (``None`` entries fall back to the Clements
+    rectangle); ``None`` uses Clements everywhere — the trainable default.
+    Per-tile Reck programs (the compiled per-tile-SVD path) mix freely with
+    Clements tiles; shorter meshes pad with identity columns.
+    """
+    if plans is None:
+        plans = ((None,) * ti,) * to
+    if len(plans) != to or any(len(row) != ti for row in plans):
+        raise ValueError(f"plans grid must be {to}x{ti}")
+    rows = []
+    for prow in plans:
+        row = []
+        for pair in prow:
+            v_plan, u_plan = (None, None) if pair is None else pair
+            sv = (clements_schedule(n) if v_plan is None
+                  else schedule_from_plan(v_plan))
+            su = (clements_schedule(n) if u_plan is None
+                  else schedule_from_plan(u_plan))
+            row.append((sv, su))
+        rows.append(tuple(row))
+    return TileGridSchedule(tiles=tuple(rows))
+
+
+@functools.lru_cache(maxsize=64)
+def _tile_grid_parity_np(grid: TileGridSchedule) -> tuple[np.ndarray,
+                                                          np.ndarray]:
+    c = grid.n_columns
+    pv = np.zeros((grid.to, grid.ti, c, 1), np.int32)
+    pu = np.zeros((grid.to, grid.ti, c, 1), np.int32)
+    for o, row in enumerate(grid.tiles):
+        for i, (sv, su) in enumerate(row):
+            pv[o, i, : sv.n_columns, 0] = sv.parity
+            pu[o, i, : su.n_columns, 0] = su.parity
+    return pv, pu
+
+
+def tile_grid_parity_arrays(grid: TileGridSchedule) -> tuple[Array, Array]:
+    """Stacked ``[To, Ti, C, 1]`` int32 parity inputs for the V/U meshes.
+
+    Identity-padded columns get parity 0 (their coefficient is the
+    identity cell, so the pairing is irrelevant).  Host-side build is
+    memoized per schedule (numpy, nothing trace-local cached), keyed by
+    content like the network variant — structurally equal grids share it.
+    """
+    pv, pu = _tile_grid_parity_np(grid)
+    return jnp.asarray(pv), jnp.asarray(pu)
+
+
 def pad_columns(coef: Array, n_columns: int) -> Array:
     """Pad ``[..., C, 8, P]`` coefficients to ``n_columns`` with identity
     cells (exact no-op columns in the sweep)."""

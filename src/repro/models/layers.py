@@ -108,7 +108,14 @@ def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 def _analog_layers(cfg: ModelConfig, d: int, f: int):
-    """The MLP's three projections as tiled RF analog processors."""
+    """The MLP's three projections as tiled RF analog processors.
+
+    With ``cfg.rfnn_backend="pallas"`` each projection's whole (To x Ti)
+    tile grid runs as one fused tile-grid megakernel per direction
+    (``repro.kernels.ops.tiled_apply``) instead of To*Ti separate mesh
+    launches; the modules here are frozen dataclasses, so re-creating
+    them per call still hits the kernel's schedule/pack caches.
+    """
     from repro.core.analog_linear import TiledAnalogLinear
     mk = lambda i, o: TiledAnalogLinear(
         in_dim=i, out_dim=o, tile_size=cfg.rfnn_tile,

@@ -159,10 +159,14 @@ class AnalogTickBatcher:
     — exactly the kernels' ragged-batch padding semantics.
 
     ``params=None`` serves a parameter-less model such as a
-    :class:`repro.compile.CompiledProgram` (``model.apply(x)``): the
+    :class:`repro.compile.CompiledProgram` or a tile-grid
+    :class:`repro.compile.CompiledTiledProgram` (``model.apply(x)``): the
     program's megakernel tensors were already emitted through the pack
-    cache at ``lower`` time, so *every* tick — the first included — does
-    zero packing work.
+    cache at ``lower`` / ``lower_tiled`` time, so *every* tick — the
+    first included — does zero packing work.  A
+    :class:`repro.core.analog_linear.TiledAnalogLinear` with
+    ``backend="pallas"`` serves the same way with ``params``: each tick
+    is one tile-grid megakernel call, steady-state ticks repack nothing.
 
     ``mesh``: optional ``jax.sharding.Mesh`` — ticks are then sharded over
     the batch grid via :func:`repro.parallel.sharding.data_parallel`, the

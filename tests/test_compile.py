@@ -179,6 +179,7 @@ def test_serving_compiled_program_zero_packing(two_layer):
 # the end-to-end MNIST digital->analog transfer (acceptance scenario)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_mnist_digital_to_analog_transfer_on_megakernel():
     """4-layer 8x8 stack: train digital, compile every layer, serve on the
     network megakernel.  The float transfer is exact (no accuracy drop)
@@ -199,3 +200,72 @@ def test_mnist_digital_to_analog_transfer_on_megakernel():
     assert res["compiled"]["float"].depth == 4
     # quantized deployment degrades synthesis but still serves end to end
     assert res["settings"]["uniform6"]["synthesis_error"] > f["synthesis_error"]
+
+
+# ---------------------------------------------------------------------------
+# tiled pipeline: per-tile-SVD grids on the tile-grid megakernel
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiled_prog():
+    """A ragged 10x12 matrix on a 3x3 grid of 4x4 tiles, Reck-programmed."""
+    w = np.random.default_rng(3).normal(size=(10, 12)) / np.sqrt(12)
+    tp = compile_mod.program_tiled(
+        compile_mod.synthesize_tiled(w, tile=4), method="reck")
+    return w, tp
+
+
+def test_synthesize_tiled_pads_and_realizes(tiled_prog):
+    w, tp = tiled_prog
+    assert (tp.to, tp.ti) == (3, 3)  # 10x12 zero-padded to 12x12
+    assert tp.programmed
+    assert np.abs(tp.realized_matrix() - w).max() < 1e-4
+
+
+def test_lower_tiled_apply_is_one_kernel_call(tiled_prog):
+    """Compiled tile-grid apply == |w @ x| via ONE tiled_apply call."""
+    w, tp = tiled_prog
+    comp = compile_mod.lower_tiled(tp)
+    x = np.random.default_rng(4).normal(size=(5, 12)).astype(np.float32)
+    calls = ops.KERNEL_PATH_CALLS["tiled_apply"]
+    y = comp.apply(jnp.asarray(x))
+    assert ops.KERNEL_PATH_CALLS["tiled_apply"] == calls + 1
+    np.testing.assert_allclose(np.asarray(y), np.abs(x @ w.T), atol=1e-4)
+
+
+def test_lower_tiled_packs_once_apply_never_repacks(tiled_prog):
+    _, tp = tiled_prog
+    packs = ops.PACK_EVENTS["tiled_apply"]
+    comp = compile_mod.lower_tiled(tp)
+    assert ops.PACK_EVENTS["tiled_apply"] <= packs + 1  # at most one emit
+    packs = ops.PACK_EVENTS["tiled_apply"]
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(4, 12)),
+                    jnp.float32)
+    for _ in range(3):
+        comp.apply(x)
+    assert ops.PACK_EVENTS["tiled_apply"] == packs  # zero packing work
+
+
+def test_quantize_calibrate_tiled_per_tile_devices(tiled_prog):
+    """Quantize + hardware-calibrate per tile: every tile freezes its own
+    noise draw, and calibration against the imperfect grid must not
+    regress the quantized program's realization error."""
+    from repro.core.hardware import HardwareModel
+
+    w, tp = tiled_prog
+    hw = HardwareModel(phase_sigma=0.01, detector_sigma=0.0)
+    key = jax.random.PRNGKey(7)
+    tq = compile_mod.quantize_tiled(tp, "uniform6")
+    bound = compile_mod.calibrate_tiled(tq, hw, key=key, steps=0)
+    # distinct per-tile draws actually bound
+    keys = [la.key_v for row in bound.grid for la in row]
+    assert len({tuple(np.asarray(k).ravel()) for k in keys}) == len(keys)
+    err_bound = np.abs(bound.realized_matrix() - w).max()
+    cal = compile_mod.calibrate_tiled(tq, hw, key=key, steps=40)
+    err_cal = np.abs(cal.realized_matrix() - w).max()
+    assert err_cal <= err_bound + 1e-6  # best-iterate guard, per tile
+    # the calibrated grid lowers and serves on the same frozen draws
+    comp = compile_mod.lower_tiled(cal)
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(3, 12)),
+                    jnp.float32)
+    assert comp.apply(x).shape == (3, 10)

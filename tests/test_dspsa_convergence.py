@@ -20,6 +20,10 @@ from repro.paper.rfnn2x2 import train_rfnn2x2
 
 jax.config.update("jax_platform_name", "cpu")
 
+# CI tiering: DSPSA convergence runs hundreds of two-measurement steps on
+# both backends.  Fast leg deselects; full suite on every push to main.
+pytestmark = pytest.mark.slow
+
 #: paper band for the Fig. 12a corner task is ~94%; the reduced-size CI
 #: dataset and budget land at 93.1% — gate a point below.
 ACC_BAND = 0.90

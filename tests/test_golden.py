@@ -29,6 +29,11 @@ from repro.paper.rfnn2x2 import RFNN2x2, decision_map
 
 jax.config.update("jax_platform_name", "cpu")
 
+# CI tiering: the goldens sweep full decision maps / logits grids through
+# both backends — minutes, not seconds.  The fast CI leg deselects them
+# (-m "not slow"); the full suite runs them on every push to main.
+pytestmark = pytest.mark.slow
+
 # seeded reference output of decision_map(net, {w:[0.9,-1.1], b:0.2}, 3, 5)
 # on the ideal device, 5x5 grid over [0, 30]^2 — regenerate only with a
 # deliberate numerics change, never to quiet a failing diff.

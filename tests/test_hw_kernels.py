@@ -336,3 +336,67 @@ def test_monte_carlo_yield_backends_agree():
     np.testing.assert_allclose(np.asarray(r_p["errors"]),
                                np.asarray(r_r["errors"]), atol=1e-5)
     assert 0.0 <= r_p["yield"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# tile-grid megakernel: quantized / hardware draw parity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       ideal=st.booleans(),
+       quantized=st.booleans())
+def test_tiled_apply_hardware_draw_parity(seed, ideal, quantized):
+    """The tile-grid kernel with per-tile hardware bindings and frozen
+    phase-noise keys must match the pure-reference per-tile composition
+    draw-for-draw — every tile is its own device consuming its own key —
+    including Table-I-quantized tile phases (snapped masters feed both
+    paths identically)."""
+    from repro.core import quantize as q_lib
+
+    rng = np.random.default_rng(seed)
+    hw = _draw_hardware(rng, ideal)
+    n, to, ti = 4, 2, 2
+    plan = mesh_lib.clements_plan(n)
+    cb = q_lib.table_i_codebook()
+    key = jax.random.PRNGKey(seed)
+    tiles = []
+    for o in range(to):
+        trow = []
+        for i in range(ti):
+            k = jax.random.fold_in(key, o * ti + i)
+            kv, ku, kp, ka = jax.random.split(k, 4)
+            vp = mesh_lib.init_mesh_params(kp, plan)
+            up = mesh_lib.init_mesh_params(jax.random.fold_in(kp, 1), plan)
+            if quantized:
+                vp = q_lib.quantize_mesh_params(vp, cb, ste=False)
+                up = q_lib.quantize_mesh_params(up, cb, ste=False)
+            trow.append({
+                "v": vp, "u": up,
+                "atten": jax.random.uniform(ka, (n,), minval=0.2,
+                                            maxval=0.9),
+                "scale": 1.0 + 0.1 * (o + i),
+                "key_v": kv, "key_u": ku,
+            })
+        tiles.append(tuple(trow))
+    tiles = tuple(tiles)
+    x = _rand_cx(jax.random.PRNGKey(seed + 1), (5, ti * n))
+
+    before = ops.KERNEL_PATH_CALLS["tiled_apply"]
+    y_k = ops.tiled_apply(tiles, x, n=n, hardware=hw)
+    assert ops.KERNEL_PATH_CALLS["tiled_apply"] == before + 1
+
+    xt = x.reshape(x.shape[:-1] + (ti, n))
+    rows = []
+    for o in range(to):
+        acc = 0
+        for i in range(ti):
+            ta = tiles[o][i]
+            h = hw_lib.apply_mesh_hw(plan, ta["v"], xt[..., i, :], hw,
+                                     ta["key_v"])
+            h = h * ta["atten"].astype(jnp.complex64)
+            y = hw_lib.apply_mesh_hw(plan, ta["u"], h, hw, ta["key_u"])
+            acc = acc + jnp.asarray(ta["scale"], jnp.complex64) * y
+        rows.append(acc)
+    y_r = jnp.concatenate(rows, axis=-1)
+    assert _rel_err(y_k, y_r) <= REL_TOL, (ideal, quantized)

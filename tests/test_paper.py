@@ -123,10 +123,12 @@ def analog_run(digits):
                        schedule="algorithm1")
 
 
+@pytest.mark.slow
 def test_mnist_digital_baseline(digital_run):
     assert digital_run["test_acc"] > 0.85
 
 
+@pytest.mark.slow
 def test_mnist_analog_and_gap(digital_run, analog_run):
     assert analog_run["test_acc"] > 0.75
     gap = digital_run["test_acc"] - analog_run["test_acc"]
@@ -138,6 +140,7 @@ def test_mnist_analog_and_gap(digital_run, analog_run):
     assert np.isin(th.round(5), cb.round(5)).all()
 
 
+@pytest.mark.slow
 def test_mnist_confusion_diagonal(digits, analog_run):
     cm = confusion_matrix(analog_run["model"], analog_run["params"],
                           digits[2], digits[3])

@@ -145,3 +145,66 @@ def test_analog_batcher_steady_state_no_repacking(analog_engine):
         b.run()
         assert all(r.done for r in more)
     assert ops.PACK_EVENTS["rfnn_network"] == packs  # zero packing work
+
+
+# ---------------------------------------------------------------------------
+# analog tick batcher: tile-grid serving (TiledAnalogLinear + compiled)
+# ---------------------------------------------------------------------------
+
+def test_analog_batcher_tiled_pallas_steady_state():
+    """Serving a TiledAnalogLinear(backend="pallas"): every tick is one
+    tile-grid megakernel call and steady-state ticks do zero packing."""
+    from repro.core.analog_linear import TiledAnalogLinear
+    from repro.kernels import ops
+
+    ref_m = TiledAnalogLinear(in_dim=8, out_dim=8, tile_size=4,
+                              output="real", backend="reference")
+    pal_m = TiledAnalogLinear(in_dim=8, out_dim=8, tile_size=4,
+                              output="real", backend="pallas")
+    params = ref_m.init(jax.random.PRNGKey(5))
+    b_ref = AnalogTickBatcher(ref_m, params, slots=3)
+    b_pal = AnalogTickBatcher(pal_m, params, slots=3)
+    reqs_r = _analog_reqs(8, 7, seed=3)
+    reqs_p = _analog_reqs(8, 7, seed=3)
+    for r in reqs_r:
+        b_ref.submit(r)
+    for r in reqs_p:
+        b_pal.submit(r)
+    calls = ops.KERNEL_PATH_CALLS["tiled_apply"]
+    b_ref.run()
+    b_pal.run()
+    assert ops.KERNEL_PATH_CALLS["tiled_apply"] > calls  # kernel path taken
+    for rr, rp in zip(reqs_r, reqs_p):
+        np.testing.assert_allclose(rp.result, rr.result, atol=1e-5)
+    # steady state: params unchanged between ticks -> zero packing work
+    packs = ops.PACK_EVENTS["tiled_apply"]
+    for tick in range(3):
+        more = _analog_reqs(8, 5, seed=4 + tick)
+        for r in more:
+            b_pal.submit(r)
+        b_pal.run()
+        assert all(r.done for r in more)
+    assert ops.PACK_EVENTS["tiled_apply"] == packs
+
+
+def test_analog_batcher_serves_compiled_tiled_program():
+    """params=None serving of a CompiledTiledProgram: megakernel tensors
+    were emitted at lower_tiled time, so NO tick — the first included —
+    does any packing work."""
+    from repro import compile as compile_mod
+    from repro.kernels import ops
+
+    w = np.random.default_rng(11).normal(size=(8, 8)) / np.sqrt(8)
+    comp = compile_mod.lower_tiled(compile_mod.program_tiled(
+        compile_mod.synthesize_tiled(w, tile=4), method="reck"))
+    batcher = AnalogTickBatcher(comp, slots=3)
+    packs = ops.PACK_EVENTS["tiled_apply"]
+    reqs = _analog_reqs(8, 5, seed=6)
+    for r in reqs:
+        batcher.submit(r)
+    batcher.run()
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        np.testing.assert_allclose(r.result, np.abs(r.features @ w.T),
+                                   atol=1e-4)
+    assert ops.PACK_EVENTS["tiled_apply"] == packs  # zero, first tick incl.
