@@ -358,6 +358,68 @@ def tiled_apply_grid(n=64, tile=16, batch=256) -> list[str]:
                 f"pallas_calls 2 vs {2 * to * ti}")]
 
 
+def tiled_apply_sharded(n=64, tile=16, batch=256) -> list[str]:
+    """shard_map scale-out of the tile-grid megakernel vs single-device.
+
+    Runs the same 64x64 fwd+bwd workload as ``tiled_apply_n64`` through
+    ``tiled_apply(mesh=...)`` — tile rows sharded over ``rows``, batch
+    over ``data`` — and reports the single-device megakernel as the
+    baseline.  Skipped (returns no rows) on a 1-device host: launch with
+    ``BENCH_HOST_DEVICES=8`` to force a host-device mesh.  On forced CPU
+    host devices the collectives go through shared memory, so the timing
+    only sanity-checks overhead; the row is allowlisted as noisy in the
+    gate (``check_gate.NOISY_ROWS``).
+    """
+    import numpy as np
+
+    from jax.sharding import Mesh
+    from repro.kernels.ops import tiled_apply
+
+    to, ti = n // tile, n // tile
+    n_dev = len(jax.devices())
+    nr = max(d for d in range(1, to + 1) if to % d == 0 and d <= n_dev)
+    nd = max(d for d in (1, 2, 4) if nr * d <= n_dev)
+    if nr * nd < 2:
+        return []
+    mesh = Mesh(np.array(jax.devices()[: nr * nd]).reshape(nr, nd),
+                ("rows", "data"))
+    plan = mesh_lib.clements_plan(tile)
+    tiles = []
+    for o in range(to):
+        trow = []
+        for i in range(ti):
+            kv, ku, ka = jax.random.split(
+                jax.random.fold_in(jax.random.PRNGKey(7), o * ti + i), 3)
+            trow.append({
+                "v": mesh_lib.init_mesh_params(kv, plan),
+                "u": mesh_lib.init_mesh_params(ku, plan),
+                "atten": jax.random.uniform(ka, (tile,), minval=0.2,
+                                            maxval=0.9),
+                "scale": 1.0 + 0.05 * (o + i),
+            })
+        tiles.append(tuple(trow))
+    tiles = tuple(tiles)
+    x = jax.random.normal(jax.random.PRNGKey(0), (batch, n))
+    w = 1.0 + jnp.arange(n, dtype=jnp.float32)
+
+    def loss(ts, xx, mesh=None):
+        return jnp.sum(jnp.abs(tiled_apply(ts, xx, n=tile, mesh=mesh)) * w)
+
+    sh_fn = jax.jit(jax.grad(lambda ts, xx: loss(ts, xx, mesh=mesh)))
+    sd_fn = jax.jit(jax.grad(loss))
+    us_sh = time_call(sh_fn, tiles, x, iters=3, reduce="min")
+    us_sd = time_call(sd_fn, tiles, x, iters=3, reduce="min")
+    g_sh, g_sd = sh_fn(tiles, x), sd_fn(tiles, x)
+    scale_ref = max(float(jnp.max(jnp.abs(g)))
+                    for g in jax.tree.leaves(g_sd))
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(g_sh), jax.tree.leaves(g_sd)))
+    return [row(f"tiled_apply_sharded_n{n}", us_sh,
+                f"single_device_us={us_sd:.1f};mesh={nr}x{nd};"
+                f"grid={to}x{ti};tile={tile};"
+                f"max_grad_rel_err={err / (scale_ref + 1e-30):.1e}")]
+
+
 def compile_apply(n=16, batch=None) -> list[str]:
     """Compiled-program apply vs the retired reference synthesis chain.
 
@@ -426,5 +488,5 @@ def flash_attention_kernel(s=None, hd=64, h=4, b=2) -> list[str]:
 
 ALL = [mesh_kernel_sweep, fused_rfnn_linear, mesh_kernel_fwd_bwd,
        mesh_fwd_bwd_nonideal, mc_yield_sweep, rfnn_linear_fwd_bwd,
-       net_fwd_bwd, tiled_apply_grid, compile_apply,
+       net_fwd_bwd, tiled_apply_grid, tiled_apply_sharded, compile_apply,
        flash_attention_kernel]

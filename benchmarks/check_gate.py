@@ -57,6 +57,8 @@ GATED_ROWS = {
 NOISY_ROWS = frozenset({
     "mc_yield_n8",          # eager python loop over draws, timed once
     "flash_attention",      # interpret-mode softmax dominated, high variance
+    "tiled_apply_sharded_n64",  # forced host-device collectives over shared
+                                # memory: scheduling noise dwarfs the kernels
 })
 
 #: the hard --prev contract: every differentially-gated row that is not

@@ -22,6 +22,14 @@ import platform
 import sys
 import time
 
+# BENCH_HOST_DEVICES=8 forces a multi-device host platform so the sharded
+# benchmark rows (tiled_apply_sharded_n64) get a real mesh; must be set
+# before jax initializes its backends
+if os.environ.get("BENCH_HOST_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_"
+        f"device_count={int(os.environ['BENCH_HOST_DEVICES'])}").strip()
+
 import jax
 
 jax.config.update("jax_platform_name", "cpu")

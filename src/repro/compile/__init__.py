@@ -20,8 +20,30 @@ lowered onto ONE tile-grid megakernel call:
     tp = calibrate_tiled(tp, PROTOTYPE, key=k)  # per-device hardware trim
     compiled = lower_tiled(tp)
     y = compiled.apply(x)                  # one fused pallas_call
+
+Yield-aware fault tolerance (compile/placement.py + runtime/elastic.py):
+place high-sensitivity tiles on high-yield physical positions before
+calibration, and remap + re-trim the grid around dead tiles:
+
+    scores = position_yield_scores(tp.to, tp.ti, PROTOTYPE, key=k, tile=16)
+    tp = apply_placement(tp, plan_placement(tile_sensitivities(tp), scores))
+    tp = calibrate_tiled(tp, PROTOTYPE, key=k)  # binds per-position draws
+    compiled = lower_tiled(tp)                  # apply() undoes the perm
+    # ... k tiles die in the field:
+    plan = plan_tile_recovery(tile_sensitivities(tp), dead, ...)
+    compiled = recover_tiled(tp, plan, PROTOTYPE, key=k)
 """
 
+from repro.compile.placement import (
+    TilePlacement,
+    apply_placement,
+    blank_tile,
+    plan_placement,
+    position_yield_scores,
+    recover_tiled,
+    tile_sensitivities,
+    undo_placement,
+)
 from repro.compile.passes import (
     calibrate,
     calibrate_tiled,
@@ -47,8 +69,11 @@ from repro.compile.program import (
 
 __all__ = [
     "AnalogProgram", "CompiledProgram", "CompiledTiledProgram",
-    "ProgramLayer", "TiledAnalogProgram", "calibrate", "calibrate_tiled",
-    "layer_matrix", "lower", "lower_tiled", "program", "program_tiled",
-    "program_error", "quantize", "quantize_tiled", "resolve_codebook",
-    "synthesize", "synthesize_tiled",
+    "ProgramLayer", "TiledAnalogProgram", "TilePlacement",
+    "apply_placement", "blank_tile", "calibrate", "calibrate_tiled",
+    "layer_matrix", "lower", "lower_tiled", "plan_placement",
+    "position_yield_scores", "program", "program_tiled", "program_error",
+    "quantize", "quantize_tiled", "recover_tiled", "resolve_codebook",
+    "synthesize", "synthesize_tiled", "tile_sensitivities",
+    "undo_placement",
 ]

@@ -486,15 +486,27 @@ def quantize_tiled(tp: TiledAnalogProgram, codebook="table1", *,
 
 def calibrate_tiled(tp: TiledAnalogProgram,
                     hardware: hw_lib.HardwareModel | None = None, *,
-                    key: Array | None = None, **kw) -> TiledAnalogProgram:
+                    key: Array | None = None, only=None,
+                    **kw) -> TiledAnalogProgram:
     """:func:`calibrate` mapped over every tile.
 
     Each tile is its own physical device: the noise-draw key is folded
-    per grid position (``o * Ti + i``) so every tile freezes an
-    independent draw, and the residual fit trims each tile against its
-    own block target through the imperfect kernel path.
+    per *physical* grid position (``o * Ti + i``) so every tile freezes
+    an independent draw, and the residual fit trims each tile against
+    its own block target through the imperfect kernel path.  On a placed
+    grid (``compile/placement.py``) the folding therefore binds each
+    tile to the draw of the position it actually occupies.
+
+    ``only``: optional iterable of ``(o, i)`` physical positions — every
+    other tile passes through untouched, keeping its existing binding
+    bit-identical.  The degraded-grid recovery path uses this to re-trim
+    exactly the tiles the remap moved.
     """
+    only_set = None if only is None else {tuple(p) for p in only}
+
     def one(o, i, la):
+        if only_set is not None and (o, i) not in only_set:
+            return la
         kt = (jax.random.fold_in(key, o * tp.ti + i)
               if key is not None else None)
         return calibrate(AnalogProgram((la,)), hardware, key=kt,
@@ -504,7 +516,9 @@ def calibrate_tiled(tp: TiledAnalogProgram,
 
 
 def lower_tiled(tp: TiledAnalogProgram, *, block_b: int | None = None,
-                interpret: bool | None = None) -> CompiledTiledProgram:
+                interpret: bool | None = None, mesh=None,
+                row_axis: str = "rows",
+                data_axis: str = "data") -> CompiledTiledProgram:
     """Emit tile-grid kernel inputs; returns a servable
     :class:`CompiledTiledProgram` whose ``apply`` is ONE ``pallas_call``
     per direction over the whole (To x Ti) grid.
@@ -512,7 +526,10 @@ def lower_tiled(tp: TiledAnalogProgram, *, block_b: int | None = None,
     Tensors are emitted through ``ops.pack_tile_grid``'s leaf-identity
     cache — packed exactly once, here — and handed back verbatim on every
     ``apply``, so serving (every tick, the first included) does zero
-    packing work.
+    packing work.  A placement on ``tp`` is carried onto the compiled
+    program (its ``apply`` undoes it digitally); ``mesh`` (a 2-axis
+    ``jax.sharding.Mesh``) makes every ``apply`` shard over
+    ``(row_axis, data_axis)`` through the kernel's shard_map path.
     """
     if not tp.programmed:
         raise ValueError("lower_tiled needs a fully programmed tile grid — "
@@ -545,4 +562,5 @@ def lower_tiled(tp: TiledAnalogProgram, *, block_b: int | None = None,
         out_dim=tp.out_dim, in_dim=tp.in_dim, tile=tp.tile,
         to=tp.to, ti=tp.ti, plans=plans, tile_args=tile_args,
         hardware=hardware, grid=grid, packed=packed,
-        block_b=block_b, interpret=interpret)
+        block_b=block_b, interpret=interpret, placement=tp.placement,
+        mesh=mesh, row_axis=row_axis, data_axis=data_axis)

@@ -1,0 +1,263 @@
+"""Yield-aware tile placement: map logical tiles onto physical positions.
+
+The paper's Sec. V scale-up composes one large matrix from a grid of
+small physical processors; fabrication spread (Sec. III, the Monte-Carlo
+yield sweep in ``paper/efficiency.monte_carlo_yield``) makes those
+positions *unequal* — each physical position freezes its own phase-noise
+draw at ``calibrate_tiled`` time.  This pass exploits the freedom the
+block decomposition leaves open: any permutation of logical tile rows and
+columns can be realized by permuting which physical position hosts which
+logical block, then permuting the digital input/output tile streams to
+match.  Placement therefore puts the *high-sensitivity* logical tiles
+(largest singular-value mass — the blocks whose distortion moves the
+realized matrix most) on the *high-yield* physical positions, and the
+near-zero blocks on the lemons.
+
+The permutation is pure digital bookkeeping:
+
+* :func:`apply_placement` physically reorders the grid (so every physical
+  position calibrates against its own draw, keys folded by *physical*
+  position exactly as an unplaced grid would), and records the
+  :class:`TilePlacement` on the program;
+* :class:`~repro.compile.program.CompiledTiledProgram` undoes it in
+  ``apply`` as index gathers on the input/output tile axes — the kernel
+  itself is untouched (same megakernel, same schedule, zero new statics);
+* :func:`recover_tiled` re-places a grid around dead positions from a
+  :class:`~repro.runtime.elastic.TileRecoveryPlan`, blanks the dead
+  positions (a passive grid's unpowered tile contributes nothing), and
+  re-calibrates exactly the tiles whose physical position changed.
+
+Placement is restricted to row x column permutations because the kernel's
+in-VMEM row combine fixes which input tiles feed which output row — an
+arbitrary tile-to-position bijection would need a different schedule,
+i.e. kernel changes; row x column permutations compose with the existing
+schedule for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compile.program import TiledAnalogProgram
+from repro.core import hardware as hw_lib
+from repro.core import mesh as mesh_lib
+from repro.kernels import ops as kernel_ops
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlacement:
+    """A logical -> physical row x column permutation of the tile grid.
+
+    Physical position ``(po, pi)`` hosts logical tile
+    ``(row_perm[po], col_perm[pi])``.  Both perms are permutations of
+    ``range(To)`` / ``range(Ti)``; the identity placement is a no-op
+    everywhere (``apply`` skips the gathers entirely).
+    """
+
+    row_perm: tuple[int, ...]
+    col_perm: tuple[int, ...]
+
+    def __post_init__(self):
+        for name, perm in (("row_perm", self.row_perm),
+                           ("col_perm", self.col_perm)):
+            if sorted(perm) != list(range(len(perm))):
+                raise ValueError(f"{name} is not a permutation: {perm}")
+
+    @classmethod
+    def identity(cls, to: int, ti: int) -> "TilePlacement":
+        return cls(tuple(range(to)), tuple(range(ti)))
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.row_perm == tuple(range(len(self.row_perm)))
+                and self.col_perm == tuple(range(len(self.col_perm))))
+
+    @property
+    def inv_row_perm(self) -> tuple[int, ...]:
+        """``inv[r]`` = the physical row hosting logical row ``r``."""
+        inv = [0] * len(self.row_perm)
+        for po, r in enumerate(self.row_perm):
+            inv[r] = po
+        return tuple(inv)
+
+    @property
+    def inv_col_perm(self) -> tuple[int, ...]:
+        inv = [0] * len(self.col_perm)
+        for pi, c in enumerate(self.col_perm):
+            inv[c] = pi
+        return tuple(inv)
+
+
+def tile_sensitivities(tp: TiledAnalogProgram) -> np.ndarray:
+    """``[To, Ti]`` singular-value mass per logical tile.
+
+    ``scale * sum(attenuation)`` is the tile's total singular-value mass
+    (sigma_max times the normalized diagonal) — the operator-norm budget
+    the block contributes to the realized matrix.  Zero-padding blocks
+    score 0 and gravitate to the worst (or dead) positions.
+    """
+    s = np.zeros((tp.to, tp.ti), np.float64)
+    for o, row in enumerate(tp.grid):
+        for i, la in enumerate(row):
+            s[o, i] = float(np.asarray(la.scale)) * float(
+                np.asarray(jnp.sum(la.attenuation)))
+    return s
+
+
+def position_yield_scores(to: int, ti: int,
+                          hardware: hw_lib.HardwareModel, *,
+                          key: Array, tile: int, seed: int = 0,
+                          interpret: bool | None = None) -> np.ndarray:
+    """``[To, Ti]`` yield score of every physical grid position.
+
+    Probes each position with the *same* fixed seeded V/D/U tile the
+    position would realize, under the phase-noise draw that position
+    freezes at ``calibrate_tiled`` time (keys folded by physical position
+    ``o*Ti + i``, then split exactly as ``calibrate`` splits them — so
+    the score ranks the draws calibration will actually bind).  The
+    metric mirrors ``paper/efficiency.monte_carlo_yield``: relative L2
+    error of the detected output against the ideal device after the
+    optimal scalar (digital gamma) compensation, negated so higher is
+    better.
+    """
+    plan = mesh_lib.clements_plan(tile)
+    kp, kq = jax.random.split(jax.random.PRNGKey(seed))
+    params_v = mesh_lib.init_mesh_params(kp, plan, with_sigma=False)
+    params_u = mesh_lib.init_mesh_params(kq, plan, with_sigma=False)
+    probes = jnp.eye(tile, dtype=jnp.complex64)
+
+    def chain(kv, ku, hw):
+        h = kernel_ops.mesh_apply(params_v, probes, n=tile, plan=plan,
+                                  hardware=hw, key=kv, interpret=interpret)
+        h = kernel_ops.mesh_apply(params_u, h, n=tile, plan=plan,
+                                  hardware=hw, key=ku, interpret=interpret)
+        return jnp.abs(h)
+
+    y_ideal = chain(None, None, None)
+    # the exact key consumption of calibrate_tiled -> calibrate:
+    # fold by physical position, fold by layer index (0), split into v/u
+    kt = jax.vmap(lambda j: jax.random.fold_in(
+        jax.random.fold_in(key, j), 0))(jnp.arange(to * ti))
+    kvu = jax.vmap(jax.random.split)(kt)
+
+    def error(kpair):
+        mag = chain(kpair[0], kpair[1], hardware)
+        gamma = (jnp.vdot(mag, y_ideal)
+                 / jnp.maximum(jnp.vdot(mag, mag), 1e-12)).real
+        return (jnp.linalg.norm(gamma * mag - y_ideal)
+                / jnp.maximum(jnp.linalg.norm(y_ideal), 1e-12))
+
+    errors = jax.vmap(error)(kvu)
+    return -np.asarray(errors, np.float64).reshape(to, ti)
+
+
+def plan_placement(sensitivity: np.ndarray,
+                   scores: np.ndarray) -> TilePlacement:
+    """Match high-sensitivity logical tiles to high-yield positions.
+
+    Works on the row/column marginals (the only degrees of freedom a
+    row x column permutation has): the most sensitive logical row is
+    assigned to the best-scoring physical row, and likewise for columns.
+    Sorting is stable, so equal-mass rows keep their logical order and a
+    uniform grid yields the identity placement.
+    """
+    sens = np.asarray(sensitivity, np.float64)
+    sc = np.asarray(scores, np.float64)
+    if sens.shape != sc.shape:
+        raise ValueError(f"shape mismatch: sensitivity {sens.shape} vs "
+                         f"scores {sc.shape}")
+    to, ti = sens.shape
+
+    def match(sens_m, score_m):
+        phys = np.argsort(-score_m, kind="stable")   # best position first
+        logi = np.argsort(-sens_m, kind="stable")    # most sensitive first
+        perm = np.empty(len(phys), np.int64)
+        perm[phys] = logi
+        return tuple(int(v) for v in perm)
+
+    return TilePlacement(row_perm=match(sens.sum(1), sc.sum(1)),
+                         col_perm=match(sens.sum(0), sc.sum(0)))
+
+
+def apply_placement(tp: TiledAnalogProgram,
+                    placement: TilePlacement) -> TiledAnalogProgram:
+    """Physically reorder the grid so position ``(po, pi)`` holds logical
+    tile ``(row_perm[po], col_perm[pi])``, recording the placement.
+
+    Run *before* ``calibrate_tiled``: the moved tiles then calibrate
+    against the draws of the positions they actually occupy (keys are
+    folded by physical position).  Raises if the program already carries
+    a placement — compose permutations via :func:`undo_placement` first.
+    """
+    if tp.placement is not None and not tp.placement.is_identity:
+        raise ValueError("program already carries a placement — "
+                         "undo_placement first")
+    if (len(placement.row_perm), len(placement.col_perm)) != (tp.to, tp.ti):
+        raise ValueError(
+            f"placement is {len(placement.row_perm)}x"
+            f"{len(placement.col_perm)} for a {tp.to}x{tp.ti} grid")
+    grid = tuple(
+        tuple(tp.grid[placement.row_perm[po]][placement.col_perm[pi]]
+              for pi in range(tp.ti))
+        for po in range(tp.to))
+    return dataclasses.replace(tp, grid=grid, placement=placement)
+
+
+def undo_placement(tp: TiledAnalogProgram) -> TiledAnalogProgram:
+    """Back to logical order (tile state — calibration included — rides
+    along with each tile)."""
+    pl = tp.placement
+    if pl is None or pl.is_identity:
+        return dataclasses.replace(tp, placement=None)
+    inv_r, inv_c = pl.inv_row_perm, pl.inv_col_perm
+    grid = tuple(
+        tuple(tp.grid[inv_r[o]][inv_c[i]] for i in range(tp.ti))
+        for o in range(tp.to))
+    return dataclasses.replace(tp, grid=grid, placement=None)
+
+
+def blank_tile(la, *, scale_zero: float = 0.0):
+    """A dead tile's program: zero digital gamma (an unpowered passive
+    tile contributes nothing to its row's combine)."""
+    return la.replace(scale=jnp.asarray(scale_zero, jnp.float32))
+
+
+def recover_tiled(tp: TiledAnalogProgram, plan,
+                  hardware: hw_lib.HardwareModel | None = None, *,
+                  key: Array | None = None, lower: bool = True,
+                  block_b: int | None = None,
+                  interpret: bool | None = None, **calibrate_kw):
+    """Rebuild a placed+calibrated grid around dead positions.
+
+    ``plan`` is a :class:`repro.runtime.elastic.TileRecoveryPlan` (plain
+    data): its permutations park the least-sensitive logical tiles on the
+    dead positions, which are then blanked; the surviving tiles whose
+    physical position changed re-``calibrate`` against their new
+    positions' draws (``plan.recalibrate``), every other tile keeps its
+    existing binding untouched.  Returns the recompiled
+    :class:`~repro.compile.program.CompiledTiledProgram` (or the
+    recovered :class:`TiledAnalogProgram` with ``lower=False``).
+    """
+    from repro.compile import passes
+
+    if not plan.viable:
+        raise ValueError(f"recovery plan is not viable: {plan.reason}")
+    logical = undo_placement(tp)
+    placed = apply_placement(
+        logical, TilePlacement(plan.row_perm, plan.col_perm))
+    dead = set(plan.dead)
+    placed = placed.map_tiles(
+        lambda o, i, la: blank_tile(la) if (o, i) in dead else la)
+    if plan.recalibrate:
+        placed = passes.calibrate_tiled(placed, hardware, key=key,
+                                        only=plan.recalibrate,
+                                        interpret=interpret, **calibrate_kw)
+    if not lower:
+        return placed
+    return passes.lower_tiled(placed, block_b=block_b, interpret=interpret)

@@ -201,6 +201,9 @@ class TiledAnalogProgram:
     in_dim: int
     tile: int
     grid: tuple[tuple[ProgramLayer, ...], ...]
+    # logical -> physical grid permutation from the yield-aware placement
+    # pass (compile/placement.py); None = grid is in logical order
+    placement: "object | None" = None
 
     def __post_init__(self):
         if not self.grid or not self.grid[0]:
@@ -235,11 +238,16 @@ class TiledAnalogProgram:
                         with_hardware: bool = True) -> np.ndarray:
         """The full complex matrix the programmed grid realizes (block
         sums of :func:`layer_matrix` per tile), truncated to
-        ``[out_dim, in_dim]``."""
+        ``[out_dim, in_dim]``.  A placed grid reports the *logical*
+        matrix: physical position ``(po, pi)`` holds logical block
+        ``(row_perm[po], col_perm[pi])``."""
         t = self.tile
         m = np.zeros((self.to * t, self.ti * t), np.complex128)
-        for o, row in enumerate(self.grid):
-            for i, la in enumerate(row):
+        pl = self.placement
+        for po, row in enumerate(self.grid):
+            for pi, la in enumerate(row):
+                o = pl.row_perm[po] if pl is not None else po
+                i = pl.col_perm[pi] if pl is not None else pi
                 m[o * t:(o + 1) * t, i * t:(i + 1) * t] = layer_matrix(
                     la, device=device, with_hardware=with_hardware)
         return m[: self.out_dim, : self.in_dim]
@@ -332,6 +340,14 @@ class CompiledTiledProgram:
     packed: tuple                # (coef_v [To,Ti,8*,P], coef_u, gains)
     block_b: int | None = None
     interpret: bool | None = None
+    # yield-aware placement (compile/placement.py): the kernel runs the
+    # physically-permuted grid; apply() permutes the digital tile streams
+    placement: "object | None" = None
+    # optional (tile-row x batch) scale-out: with a 2-axis mesh every
+    # apply shards through kernels/ops.tiled_apply's shard_map path
+    mesh: "object | None" = None
+    row_axis: str = "rows"
+    data_axis: str = "data"
 
     def apply(self, x: Array) -> Array:
         """``x[..., in_dim]`` -> detected magnitudes ``[..., out_dim]``.
@@ -340,12 +356,29 @@ class CompiledTiledProgram:
         through its row's meshes, rows combine coherently in VMEM, and
         the detector reads the combined magnitude — the paper's blocked
         scale-up of the 8x8 processor with zero per-tile launches.
+
+        A placed program feeds physical column ``pi`` logical input tile
+        ``col_perm[pi]`` and reads logical output row ``r`` from physical
+        row ``inv_row_perm[r]`` — two index gathers on the digital tile
+        streams, zero kernel changes.
         """
         xc = _prep_input(x, self.in_dim, self.ti * self.tile)
+        pl = self.placement
+        permuted = pl is not None and not pl.is_identity
+        if permuted:
+            xt = xc.reshape(xc.shape[:-1] + (self.ti, self.tile))
+            xc = jnp.take(xt, jnp.asarray(pl.col_perm), axis=-2).reshape(
+                xc.shape)
         y = kernel_ops.tiled_apply(
             self.tile_args, xc, n=self.tile, plans=self.plans,
             hardware=self.hardware, block_b=self.block_b,
-            interpret=self.interpret, packed=(self.grid, self.packed))
+            interpret=self.interpret, packed=(self.grid, self.packed),
+            mesh=self.mesh, row_axis=self.row_axis,
+            data_axis=self.data_axis)
+        if permuted:
+            yt = y.reshape(y.shape[:-1] + (self.to, self.tile))
+            y = jnp.take(yt, jnp.asarray(pl.inv_row_perm),
+                         axis=-2).reshape(y.shape)
         return jnp.abs(y)[..., : self.out_dim]
 
     def n_cells(self) -> int:

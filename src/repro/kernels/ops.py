@@ -51,13 +51,14 @@ Array = jax.Array
 #: silent reference fallback left to fall into).  Counts tick on every
 #: public-wrapper call (trace time under an outer jit).
 KERNEL_PATH_CALLS = {"mesh_apply": 0, "rfnn_linear": 0, "mesh_apply_cells": 0,
-                     "rfnn_network": 0, "tiled_apply": 0}
+                     "rfnn_network": 0, "tiled_apply": 0,
+                     "tiled_apply_sharded": 0}
 
 #: Instrumentation: number of times each jitted impl was actually *traced*.
 #: Regression tests use this to pin the schedule/trace-cache memoization —
 #: structurally equal plans must not re-trigger traces.
 TRACE_COUNTS = {"mesh_apply": 0, "rfnn_linear": 0, "rfnn_network": 0,
-                "tiled_apply": 0}
+                "tiled_apply": 0, "tiled_apply_sharded": 0}
 
 #: Instrumentation: number of coefficient-pack builds actually executed by
 #: :func:`rfnn_network` (cache misses / tracer bypasses).  Steady-state
@@ -78,8 +79,11 @@ def _pad_batch(x2d: Array, block: int) -> tuple[Array, int]:
     b = x2d.shape[0]
     pad = (-b) % block
     if pad:
-        x2d = jnp.concatenate(
-            [x2d, jnp.zeros((pad,) + x2d.shape[1:], x2d.dtype)], axis=0)
+        # jnp.pad, not concatenate-with-zeros: GSPMD mis-partitions a
+        # concatenate feeding shard_map on a multi-axis mesh (the row-axis
+        # shards get summed instead of replicated); the pad HLO shards
+        # correctly and is semantically identical here
+        x2d = jnp.pad(x2d, ((0, pad),) + ((0, 0),) * (x2d.ndim - 1))
     return x2d, b
 
 
@@ -713,10 +717,189 @@ def _tiled_apply_impl(grid, block_b, interpret, coef_v, coef_u, gains, x):
     return y.astype(jnp.complex64).reshape(batch_shape + (to * n,))
 
 
+# ---------------------------------------------------------------------------
+# Sharded tile-grid megakernel: (tile-row x batch) grid over a jax.Mesh
+# ---------------------------------------------------------------------------
+#
+# The tile-grid kernel's pallas grid is (To x batch blocks); past one
+# device's VMEM, the same grid shards over a 2-axis ``jax.Mesh`` via
+# shard_map: each device runs the *identical* pallas call on its
+# (To/rows)-row slab with its batch shard.  The forward needs no
+# collective — every row's combine is local to the device holding that
+# row.  The backward's input cotangent is the transpose of the row
+# combine: each device sums its local per-row partials, and a ``psum``
+# over the row axis finishes the reduction — the matched-line power
+# combiner's exact distributed analog.  The pallas calls take only
+# dimensions as statics (all per-tile structure rides in the
+# parity/coefficient *operands*), so the row-local call is the same
+# program on every device and needs no per-shard statics.
+#
+# Coefficient operands enter the shard_map REPLICATED (in_spec P()) and
+# each device slices its own row slab in-body by ``axis_index``; the
+# backward all-gathers the coefficient grads back to replicated.  They
+# are small (To*Ti*C*8*P floats), and splitting them on the row axis
+# instead trips a GSPMD bug on this jax version: under an enclosing jit
+# on a multi-axis mesh, concatenate/stack-built values (exactly what
+# ``pack_tile_grid`` emits when traced, e.g. under ``jit(grad(...))``)
+# feeding a shard_map along a partitioned axis get mis-partitioned —
+# row shards arrive summed, corrupting forward and backward alike.
+# Replicated operands take the all-gather path, which is sound (the
+# batch planes are safe either way: they are built with ``jnp.pad`` +
+# strided slices — see ``_pad_batch``).
+
+
+def _shard_specs(row_axis: str, data_axis: str):
+    from repro.parallel.sharding import tile_grid_shard_specs
+
+    return tile_grid_shard_specs(row_axis, data_axis)
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    from repro.parallel.sharding import shard_map_compat
+
+    return shard_map_compat(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)
+
+
+def _row_slab(row_axis, to_local):
+    """In-body slice of a device's tile-row slab from a replicated
+    ``[To, ...]`` operand."""
+    def sl(a):
+        r = jax.lax.axis_index(row_axis)
+        return jax.lax.dynamic_slice_in_dim(a, r * to_local, to_local, 0)
+    return sl
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _tilegrid_planes_sharded(grid, mesh, row_axis, data_axis, block_b, nb,
+                             interpret, coef_v, coef_u, gains,
+                             xer, xei, xor, xoi):
+    specs = _shard_specs(row_axis, data_axis)
+    to_local = grid.to // mesh.shape[row_axis]
+    pv, pu = tile_grid_parity_arrays(grid)
+
+    def body(cv, pv, cu, pu, g, xer, xei, xor, xoi):
+        sl = _row_slab(row_axis, to_local)
+        call = givens_mesh.tilegrid_pallas_call(
+            grid.n, to_local, grid.ti, grid.n_columns, block_b, nb,
+            interpret)
+        return tuple(call(sl(cv), sl(pv), sl(cu), sl(pu), sl(g),
+                          xer, xei, xor, xoi))
+
+    fn = _shard_map(body, mesh,
+                    (specs.coef,) * 5 + (specs.x_plane,) * 4,
+                    (specs.o_plane,) * 4)
+    return fn(coef_v, pv, coef_u, pu, gains, xer, xei, xor, xoi)
+
+
+def _tilegrid_planes_sharded_fwd(grid, mesh, row_axis, data_axis, block_b,
+                                 nb, interpret, coef_v, coef_u, gains,
+                                 xer, xei, xor, xoi):
+    specs = _shard_specs(row_axis, data_axis)
+    to_local = grid.to // mesh.shape[row_axis]
+    pv, pu = tile_grid_parity_arrays(grid)
+
+    def body(cv, pv, cu, pu, g, xer, xei, xor, xoi):
+        sl = _row_slab(row_axis, to_local)
+        call = givens_mesh.tilegrid_fwd_pallas_call(
+            grid.n, to_local, grid.ti, grid.n_columns, block_b, nb,
+            interpret)
+        return tuple(call(sl(cv), sl(pv), sl(cu), sl(pu), sl(g),
+                          xer, xei, xor, xoi))
+
+    fn = _shard_map(body, mesh,
+                    (specs.coef,) * 5 + (specs.x_plane,) * 4,
+                    (specs.o_plane,) * 4 + (specs.stage,) * 8)
+    oer, oei, oor, ooi, *stages = fn(coef_v, pv, coef_u, pu, gains,
+                                     xer, xei, xor, xoi)
+    # residuals keep their shardings inside the enclosing jit: coefficient
+    # stacks stay row-split, stage planes stay (row x batch)-split, so the
+    # backward's shard_map consumes them without any resharding
+    return (oer, oei, oor, ooi), (coef_v, coef_u, gains,
+                                  (xer, xei, xor, xoi), tuple(stages))
+
+
+def _tilegrid_planes_sharded_bwd(grid, mesh, row_axis, data_axis, block_b,
+                                 nb, interpret, res, cot):
+    coef_v, coef_u, gains, xplanes, stages = res
+    specs = _shard_specs(row_axis, data_axis)
+    to_local = grid.to // mesh.shape[row_axis]
+    pv, pu = tile_grid_parity_arrays(grid)
+
+    def body(cv, pv, cu, pu, g, xer, xei, xor, xoi, *rest):
+        sl = _row_slab(row_axis, to_local)
+        cv, pv, cu, pu, g = sl(cv), sl(pv), sl(cu), sl(pu), sl(g)
+        call = givens_mesh.tilegrid_bwd_pallas_call(
+            grid.n, to_local, grid.ti, grid.n_columns, block_b, nb,
+            interpret)
+        dcv, dcu, dg, dxer, dxei, dxor, dxoi = call(
+            givens_mesh.inverse_coefficients(cv),
+            givens_mesh.adjoint_coefficients(cv), pv,
+            givens_mesh.inverse_coefficients(cu),
+            givens_mesh.adjoint_coefficients(cu), pu,
+            g, xer, xei, xor, xoi, *rest)
+        # dx arrives as per-row partials [To_local, B, Ti, P]: the local
+        # sum over this device's rows, then the psum over the row axis,
+        # complete the transpose of the (now distributed) row combine
+        dx = tuple(jax.lax.psum(jnp.sum(d, axis=0), row_axis)
+                   for d in (dxer, dxei, dxor, dxoi))
+        # coefficient grads: psum over the batch axis (the usual DP
+        # gradient reduction of per-shard partials), then an all-gather
+        # over the row axis hands every device the full replicated grad
+        # — matching the replicated primal operands, so the packing
+        # transpose outside never consumes a row-partitioned value
+        dcv, dcu, dg = (
+            jax.lax.all_gather(jax.lax.psum(d, data_axis), row_axis,
+                               axis=0, tiled=True)
+            for d in (dcv, dcu, dg))
+        return (dcv, dcu, dg) + dx
+
+    fn = _shard_map(
+        body, mesh,
+        (specs.coef,) * 5 + (specs.x_plane,) * 4 + (specs.stage,) * 8
+        + (specs.o_plane,) * 4,
+        (specs.coef,) * 3 + (specs.dx_plane,) * 4)
+    return tuple(fn(coef_v, pv, coef_u, pu, gains,
+                    *xplanes, *stages, *cot))
+
+
+_tilegrid_planes_sharded.defvjp(_tilegrid_planes_sharded_fwd,
+                                _tilegrid_planes_sharded_bwd)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5))
+def _tiled_apply_sharded_impl(grid, mesh, row_axis, data_axis, block_b,
+                              interpret, coef_v, coef_u, gains, x):
+    TRACE_COUNTS["tiled_apply_sharded"] += 1  # python side effect: trace only
+    n, to, ti = grid.n, grid.to, grid.ti
+    batch_shape = x.shape[:-1]
+    xt = x.reshape((-1, ti, n)).astype(jnp.complex64)
+    n_data = mesh.shape[data_axis]
+    bb = _tilegrid_auto_block(max(1, -(-xt.shape[0] // n_data)), block_b,
+                              n, ti)
+    # every device's batch shard must tile into whole blocks
+    xt, b_orig = _pad_batch(xt, bb * n_data)
+    nb = xt.shape[0] // n_data // bb
+    xe, xo = xt[..., 0::2], xt[..., 1::2]          # [B, Ti, P] per plane
+    planes = (jnp.real(xe).astype(jnp.float32),
+              jnp.imag(xe).astype(jnp.float32),
+              jnp.real(xo).astype(jnp.float32),
+              jnp.imag(xo).astype(jnp.float32))
+    oer, oei, oor, ooi = _tilegrid_planes_sharded(
+        grid, mesh, row_axis, data_axis, bb, nb, interpret,
+        coef_v, coef_u, gains, *planes)
+    ye = oer + 1j * oei                            # [B, To, P]
+    yo = oor + 1j * ooi
+    y = jnp.stack([ye, yo], axis=-1).reshape((-1, to * n))[:b_orig]
+    return y.astype(jnp.complex64).reshape(batch_shape + (to * n,))
+
+
 def tiled_apply(tiles, x: Array, *, n: int, plans=None,
                 hardware: hw_lib.HardwareModel | None = None,
                 block_b: int | None = None,
-                interpret: bool | None = None, packed=None) -> Array:
+                interpret: bool | None = None, packed=None,
+                mesh=None, row_axis: str = "rows",
+                data_axis: str = "data") -> Array:
     """A (To x Ti) tile-grid matmul ``sum_i gamma U(D(V x_i))`` per row,
     in ONE ``pallas_call`` per direction.
 
@@ -734,6 +917,17 @@ def tiled_apply(tiles, x: Array, *, n: int, plans=None,
     ``packed``: an explicit :func:`pack_tile_grid` result — offline
     compilation (``repro.compile.lower_tiled``) hands it back here and
     skips the pack/cache lookup entirely.
+
+    ``mesh``: an optional 2-axis ``jax.sharding.Mesh`` — the same grid
+    then shards over ``(row_axis, data_axis)`` via shard_map: tile rows
+    split over ``row_axis`` (To no longer has to fit one device), batch
+    over ``data_axis``, each device running the identical row-local
+    pallas call.  Forward needs no collective (each row's combine is
+    device-local); the backward's input cotangent finishes with a
+    ``psum`` over ``row_axis`` — the distributed transpose of the
+    matched-line row combine.  Semantics (fwd and VJP) match the
+    single-device call to float tolerance; requires
+    ``To % mesh.shape[row_axis] == 0``.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -745,4 +939,15 @@ def tiled_apply(tiles, x: Array, *, n: int, plans=None,
         raise ValueError(
             f"expected trailing dim {grid.ti * grid.n} "
             f"(Ti={grid.ti} tiles of n={grid.n}), got {x.shape}")
-    return _tiled_apply_impl(grid, block_b, interpret, *tensors, x)
+    if mesh is None:
+        return _tiled_apply_impl(grid, block_b, interpret, *tensors, x)
+    KERNEL_PATH_CALLS["tiled_apply_sharded"] += 1
+    for ax in (row_axis, data_axis):
+        if ax not in mesh.shape:
+            raise ValueError(f"mesh has no axis {ax!r}: {dict(mesh.shape)}")
+    if grid.to % mesh.shape[row_axis]:
+        raise ValueError(
+            f"To={grid.to} tile rows do not shard over "
+            f"{mesh.shape[row_axis]} devices on axis {row_axis!r}")
+    return _tiled_apply_sharded_impl(grid, mesh, row_axis, data_axis,
+                                     block_b, interpret, *tensors, x)

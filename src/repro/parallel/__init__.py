@@ -2,16 +2,19 @@
 
 from repro.parallel.sharding import (
     ShardingRules,
+    TileGridShardSpecs,
     active_mesh,
     constrain,
     data_parallel,
     logical_spec,
     set_rules,
     shard_map_compat,
+    tile_grid_shard_specs,
     use_mesh_and_rules,
 )
 
 __all__ = [
-    "ShardingRules", "active_mesh", "constrain", "data_parallel",
-    "logical_spec", "set_rules", "shard_map_compat", "use_mesh_and_rules",
+    "ShardingRules", "TileGridShardSpecs", "active_mesh", "constrain",
+    "data_parallel", "logical_spec", "set_rules", "shard_map_compat",
+    "tile_grid_shard_specs", "use_mesh_and_rules",
 ]

@@ -146,6 +146,59 @@ def named_sharding(mesh: Mesh, rules: ShardingRules, *names) -> NamedSharding:
 
 
 # ---------------------------------------------------------------------------
+# Tile-grid scale-out: (tile-row x batch) sharding specs for the megakernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileGridShardSpecs:
+    """PartitionSpecs of every tile-grid megakernel operand/output class.
+
+    The tile-grid kernel's pallas grid is (tile rows x batch blocks); the
+    distributed layout shards the *work* over both mesh axes:
+
+      * ``coef`` — the ``[To, Ti, C, 8, P]`` coefficient stacks (and the
+        ``[To, Ti, C, 1]`` parities / ``[To, Ti, 12, P]`` gains):
+        REPLICATED.  Each device slices its own tile-row slab in-body
+        (``axis_index`` over the row axis).  They are small, and feeding
+        them row-partitioned trips a GSPMD mis-partitioning bug on this
+        jax version when the stacks are traced (built by concatenate
+        under an enclosing jit, e.g. ``jit(grad(...))`` over unpacked
+        tiles) — see the note in ``repro.kernels.ops``;
+      * ``x_plane`` — the ``[B, Ti, P]`` input planes: batch-split,
+        replicated over tile rows (every row sweeps the whole input);
+      * ``o_plane`` — the ``[B, To, P]`` combined row outputs: split on
+        both axes (each device owns its rows' outputs for its batch);
+      * ``stage`` — the ``[To, Ti, B, P]`` VJP stage residuals: tile rows
+        and batch both split, input-tile axis whole;
+      * ``dx_plane`` — the ``[B, Ti, P]`` input cotangent *after* the
+        cross-device ``psum`` over the row axis (the matched-line
+        combiner's transpose): batch-split, replicated over rows.
+
+    ``coef`` is also the out_spec of the VJP's coefficient grads: the
+    backward psums them over the batch axis and all-gathers over the row
+    axis, so they leave the shard_map replicated too.
+    """
+
+    coef: P
+    x_plane: P
+    o_plane: P
+    stage: P
+    dx_plane: P
+
+
+def tile_grid_shard_specs(row_axis: str = "rows",
+                          data_axis: str = "data") -> TileGridShardSpecs:
+    """The canonical (tile-row x batch) sharding of the tile-grid kernel."""
+    return TileGridShardSpecs(
+        coef=P(),
+        x_plane=P(data_axis),
+        o_plane=P(data_axis, row_axis),
+        stage=P(row_axis, None, data_axis),
+        dx_plane=P(data_axis),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Data-parallel wrapper over the batch grid
 # ---------------------------------------------------------------------------
 

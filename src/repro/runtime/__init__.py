@@ -1,9 +1,16 @@
 """Fault-tolerance runtime: straggler monitor, elastic re-meshing, failure
 injection for tests, and the supervised training driver."""
 
-from repro.runtime.elastic import RecoveryPlan, plan_recovery
+from repro.runtime.elastic import (
+    RecoveryPlan,
+    TileRecoveryPlan,
+    hosts_to_chips,
+    plan_recovery,
+    plan_tile_recovery,
+)
 from repro.runtime.straggler import StragglerMonitor
-from repro.runtime.failures import FailureInjector
+from repro.runtime.failures import Failure, FailureInjector, tile_row_failures
 
-__all__ = ["RecoveryPlan", "plan_recovery", "StragglerMonitor",
-           "FailureInjector"]
+__all__ = ["Failure", "FailureInjector", "RecoveryPlan",
+           "StragglerMonitor", "TileRecoveryPlan", "hosts_to_chips",
+           "plan_recovery", "plan_tile_recovery", "tile_row_failures"]

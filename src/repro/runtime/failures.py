@@ -6,7 +6,11 @@ so the driver's recovery path is exercised deterministically in CI:
   * ``host_down``  — a host stops heartbeating (drop its chips);
   * ``straggler``  — a host's step time inflates by a factor;
   * ``crash``      — the training process dies mid-step (tests restart
-    from checkpoint + exact data-stream resume).
+    from checkpoint + exact data-stream resume);
+  * ``tile_down``  — a physical analog tile (or, scheduled per-cell, a
+    whole tile row) drops out of the (To x Ti) grid: serving recovers by
+    remapping the placement (``runtime.elastic.plan_tile_recovery`` +
+    ``compile.recover_tiled``) instead of rebuilding a chip mesh.
 """
 
 from __future__ import annotations
@@ -17,9 +21,10 @@ import dataclasses
 @dataclasses.dataclass(frozen=True)
 class Failure:
     step: int
-    kind: str              # host_down | straggler | crash
+    kind: str              # host_down | straggler | crash | tile_down
     host: int = 0
     factor: float = 5.0    # straggler slowdown
+    tile: tuple[int, int] = (0, 0)   # tile_down: physical (row, col)
 
 
 @dataclasses.dataclass
@@ -27,6 +32,7 @@ class FailureInjector:
     schedule: list[Failure]
     down_hosts: set = dataclasses.field(default_factory=set)
     slow_hosts: dict = dataclasses.field(default_factory=dict)
+    dead_tiles: set = dataclasses.field(default_factory=set)
 
     def at_step(self, step: int) -> list[Failure]:
         fired = [f for f in self.schedule if f.step == step]
@@ -35,6 +41,8 @@ class FailureInjector:
                 self.down_hosts.add(f.host)
             elif f.kind == "straggler":
                 self.slow_hosts[f.host] = f.factor
+            elif f.kind == "tile_down":
+                self.dead_tiles.add(tuple(f.tile))
         return fired
 
     def step_time(self, host: int, base: float) -> float:
@@ -42,3 +50,10 @@ class FailureInjector:
 
     def alive(self, num_hosts: int) -> list[int]:
         return [h for h in range(num_hosts) if h not in self.down_hosts]
+
+
+def tile_row_failures(step: int, row: int, ti: int) -> list[Failure]:
+    """A whole physical tile row dying at once — the ISSUE's headline
+    degraded-grid scenario — as per-tile ``tile_down`` failures."""
+    return [Failure(step=step, kind="tile_down", tile=(row, i))
+            for i in range(ti)]

@@ -135,15 +135,24 @@ class ContinuousBatcher:
 
 @dataclasses.dataclass
 class AnalogRequest:
-    """One feature vector awaiting an analog-network forward."""
+    """One feature vector awaiting an analog-network forward.
+
+    ``deadline_ticks``: optional per-request tick budget — a request
+    still queued that many engine ticks after submission completes as
+    *failed* (``failed=True``, no result) instead of sitting in the
+    queue forever behind an outage.
+    """
 
     rid: int
     features: np.ndarray        # [d] float
     result: np.ndarray | None = None
+    deadline_ticks: int | None = None
+    failed: bool = False
+    submitted_tick: int = 0     # stamped by the batcher at submit()
 
     @property
     def done(self) -> bool:
-        return self.result is not None
+        return self.failed or self.result is not None
 
 
 class AnalogTickBatcher:
@@ -171,29 +180,86 @@ class AnalogTickBatcher:
     ``mesh``: optional ``jax.sharding.Mesh`` — ticks are then sharded over
     the batch grid via :func:`repro.parallel.sharding.data_parallel`, the
     same megakernel running per-device.
+
+    Fault tolerance: with a ``failure_injector``
+    (:class:`repro.runtime.FailureInjector`) the batcher polls the
+    injector's schedule at every tick; a fired ``tile_down`` marks the
+    tick *failed* — the batcher calls ``recovery(dead_tiles)`` (which
+    should run ``plan_tile_recovery`` + ``compile.recover_tiled`` and
+    return the recompiled program), swaps the model in mid-stream, and
+    serves the same tick on the recovered grid.  In-flight requests keep
+    draining; only requests past their ``deadline_ticks`` complete as
+    failed.  ``stats`` surfaces ``served`` / ``dropped`` / ``recovered``
+    counters, ``events`` the recovery log.
     """
 
     def __init__(self, model, params=None, *, slots: int, mesh=None,
-                 data_axis: str = "data"):
+                 data_axis: str = "data", failure_injector=None,
+                 recovery=None):
         self.model = model
         self.params = params
         self.n_slots = slots
+        self.mesh = mesh
+        self.data_axis = data_axis
         self.queue: list[AnalogRequest] = []
+        self.injector = failure_injector
+        self.recovery = recovery
+        self.ticks = 0
+        self.stats = {"served": 0, "dropped": 0, "recovered": 0}
+        self.events: list[dict] = []
+        self._bind_apply()
+
+    def _bind_apply(self):
+        model, params = self.model, self.params
         if params is None:
             self._apply = lambda p, x: model.apply(x)
         else:
             self._apply = lambda p, x: model.apply(p, x)
-        if mesh is not None:
+        if self.mesh is not None:
             from repro.parallel.sharding import data_parallel
 
-            self._apply = data_parallel(self._apply, mesh,
-                                        axis_name=data_axis)
+            self._apply = data_parallel(self._apply, self.mesh,
+                                        axis_name=self.data_axis)
 
     def submit(self, req: AnalogRequest):
+        req.submitted_tick = self.ticks
         self.queue.append(req)
+
+    def _expire(self):
+        """Complete overdue queued requests as failed (never silently
+        stuck in the queue behind an outage)."""
+        live = []
+        for req in self.queue:
+            if (req.deadline_ticks is not None
+                    and self.ticks - req.submitted_tick
+                    >= req.deadline_ticks):
+                req.failed = True
+                self.stats["dropped"] += 1
+            else:
+                live.append(req)
+        self.queue = live
+
+    def _check_failures(self):
+        """Poll the injector; a fired ``tile_down`` triggers mid-stream
+        recovery — swap in the recompiled program, keep draining."""
+        if self.injector is None:
+            return
+        fired = self.injector.at_step(self.ticks)
+        if any(f.kind == "tile_down" for f in fired) and (
+                self.recovery is not None):
+            dead = tuple(sorted(self.injector.dead_tiles))
+            self.model = self.recovery(dead)
+            self._bind_apply()
+            self.stats["recovered"] += 1
+            self.events.append(
+                {"tick": self.ticks, "kind": "tile_recovery",
+                 "dead_tiles": dead})
 
     def tick(self) -> int:
         """Serve one engine tick; returns the number of requests served."""
+        self._check_failures()
+        self._expire()
+        self.ticks += 1
         if not self.queue:
             return 0
         active, self.queue = (self.queue[: self.n_slots],
@@ -204,10 +270,12 @@ class AnalogTickBatcher:
         out = np.asarray(self._apply(self.params, jnp.asarray(panel)))
         for i, req in enumerate(active):
             req.result = out[i]
+        self.stats["served"] += len(active)
         return len(active)
 
     def run(self, max_ticks: int = 10_000):
-        """Drain the queue; returns when every submitted request is done."""
+        """Drain the queue; returns when every submitted request is done
+        (served, or completed-as-failed past its deadline)."""
         for _ in range(max_ticks):
             if self.tick() == 0 and not self.queue:
                 return

@@ -28,3 +28,18 @@ def _deterministic_numpy_seed():
     """Reset the legacy numpy global RNG per test for reproducibility."""
     np.random.seed(0)
     yield
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_jit_caches_between_modules():
+    """Release compiled executables when a test module finishes.
+
+    The suite compiles hundreds of interpret-mode kernel programs; the jit
+    caches keep every executable alive for the whole run, and on the CPU
+    backend that accumulation eventually segfaults XLA's backend_compile on
+    a later large program (deterministically ~320 tests in).  Per-module
+    cache drops bound the live set; within-module caching (the no-retrace
+    and single-pack-event tests) is unaffected.
+    """
+    yield
+    jax.clear_caches()

@@ -43,3 +43,65 @@ def test_recovery_mesh_recompiles():
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                             "JAX_PLATFORMS": "cpu"})
     assert "ELASTIC_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# planner edge cases: pure data, no mesh build needed
+# ---------------------------------------------------------------------------
+
+def test_plan_recovery_below_floor_is_nonviable():
+    from repro.runtime import plan_recovery
+
+    # one chip short of the smallest (4, 16) mesh
+    plan = plan_recovery(63)
+    assert not plan.viable
+    assert plan.mesh_shape == () and plan.dp_shards == 0
+    assert "63" in plan.reason and "64" in plan.reason
+
+
+def test_plan_recovery_non_divisor_host_count_drops_remainder():
+    from repro.runtime import hosts_to_chips, plan_recovery
+
+    # 33 hosts x 4 chips = 132 chips: the largest tileable data axis is 8
+    # (128 chips) and the 4 stragglers sit out
+    plan = plan_recovery(hosts_to_chips(33))
+    assert plan.viable
+    assert plan.mesh_shape == (8, 16)
+    assert plan.dropped_chips == 132 - 128
+
+
+def test_plan_recovery_exact_boundaries():
+    from repro.runtime import plan_recovery
+
+    full = plan_recovery(512)
+    assert full.viable and full.mesh_shape == (2, 16, 16)
+    assert full.mesh_axes == ("pod", "data", "model")
+    assert full.accum_multiplier == 1 and full.dropped_chips == 0
+
+    pod = plan_recovery(256)
+    assert pod.viable and pod.mesh_shape == (16, 16)
+    assert pod.accum_multiplier == 2     # keep the global batch
+    assert pod.dropped_chips == 0
+
+    floor = plan_recovery(64)
+    assert floor.viable and floor.mesh_shape == (4, 16)
+    assert floor.accum_multiplier == 8
+
+
+def test_plan_recovery_model_axis_parameter():
+    from repro.runtime import plan_recovery
+
+    # an 8-wide TP ring on a 64-chip fleet: half the fleet survives
+    plan = plan_recovery(32, original_chips=64, model_axis=8)
+    assert plan.viable
+    assert plan.mesh_shape == (4, 8)
+    assert plan.accum_multiplier == 2    # full dp 8 -> dp 4
+    # the floor scales with the ring width too
+    assert not plan_recovery(31, original_chips=64, model_axis=8).viable
+
+
+def test_hosts_to_chips_host_chips_parameter():
+    from repro.runtime import hosts_to_chips
+
+    assert hosts_to_chips(10) == 40          # v5e default: 4 chips/host
+    assert hosts_to_chips(10, host_chips=8) == 80

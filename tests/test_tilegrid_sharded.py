@@ -1,0 +1,110 @@
+"""Sharded tile-grid megakernel: shard_map scale-out over (rows x data).
+
+The acceptance bar: on a forced 8-device host mesh with the tile-row axis
+genuinely sharded (> 1 row device, so the backward's cross-device psum
+row-combine actually runs), forward AND the full custom VJP match the
+single-device megakernel to <= 1e-5 relative.
+"""
+
+import subprocess
+import sys
+
+import pytest
+
+_SHARDED_PROGRAM = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import mesh as mesh_lib
+from repro.kernels import ops
+
+rng = np.random.default_rng(0)
+n, to, ti, b = 4, 4, 2, 10          # ragged batch: 10 % (block*data) != 0
+plan = mesh_lib.clements_plan(n)
+tiles = []
+for o in range(to):
+    trow = []
+    for i in range(ti):
+        kv, ku, ka = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(7), o * ti + i), 3)
+        trow.append({
+            "v": mesh_lib.init_mesh_params(kv, plan),
+            "u": mesh_lib.init_mesh_params(ku, plan),
+            "atten": jax.random.uniform(ka, (n,), minval=0.2, maxval=0.9),
+            "scale": 1.0 + 0.05 * (o + i),
+        })
+    tiles.append(tuple(trow))
+tiles = tuple(tiles)
+x = jnp.asarray(rng.normal(size=(b, ti * n)).astype(np.float32))
+w = jnp.asarray(rng.normal(size=(b, to * n)).astype(np.float32))
+
+
+def loss(tiles, x, mesh=None):
+    y = ops.tiled_apply(tiles, x, n=n, mesh=mesh)
+    return jnp.sum(jnp.abs(y) * w)
+
+
+y_ref = np.asarray(ops.tiled_apply(tiles, x, n=n))
+g_ref = jax.grad(loss, argnums=(0, 1))(tiles, x)
+
+# tile rows sharded 4-way AND batch sharded 2-way: both collectives run
+for shape in [(4, 2), (2, 4)]:
+    nr, nd = shape
+    mesh = Mesh(np.array(jax.devices()[: nr * nd]).reshape(nr, nd),
+                ("rows", "data"))
+    y_sh = np.asarray(ops.tiled_apply(tiles, x, n=n, mesh=mesh))
+    rel = np.abs(y_sh - y_ref).max() / np.abs(y_ref).max()
+    assert rel <= 1e-5, f"fwd {shape}: rel={rel}"
+    g_sh = jax.grad(loss, argnums=(0, 1))(tiles, x, mesh=mesh)
+    for a, bb in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_sh)):
+        a, bb = np.asarray(a), np.asarray(bb)
+        rel = np.abs(a - bb).max() / max(np.abs(a).max(), 1e-12)
+        assert rel <= 1e-5, f"grad {shape}: rel={rel}"
+
+# under an ENCLOSING jit the packing runs traced (the training-step
+# shape: jit(grad(loss)) over raw tiles) — this is the configuration
+# that trips GSPMD mis-partitioning of concatenate-built operands
+# feeding shard_map on this jax version, which the kernel's replicated
+# coefficient specs work around; cover it explicitly
+mesh = Mesh(np.array(jax.devices()[:8]).reshape(4, 2), ("rows", "data"))
+g_jit = jax.jit(jax.grad(lambda ts, xx: loss(ts, xx, mesh=mesh),
+                         argnums=(0, 1)))(tiles, x)
+for a, bb in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_jit)):
+    a, bb = np.asarray(a), np.asarray(bb)
+    rel = np.abs(a - bb).max() / max(np.abs(a).max(), 1e-12)
+    assert rel <= 1e-5, f"jit(grad) rel={rel}"
+
+# the sharded path is instrumented separately from the single-device path
+assert ops.KERNEL_PATH_CALLS["tiled_apply_sharded"] > 0
+
+# validation: To must shard evenly over the row axis
+mesh3 = Mesh(np.array(jax.devices()[:3]).reshape(3, 1), ("rows", "data"))
+try:
+    ops.tiled_apply(tiles, x, n=n, mesh=mesh3)
+    raise SystemExit("expected a ValueError for To % rows != 0")
+except ValueError:
+    pass
+
+# a mesh without the named axes is rejected up front
+meshx = Mesh(np.array(jax.devices()[:4]).reshape(4, 1), ("r", "d"))
+try:
+    ops.tiled_apply(tiles, x, n=n, mesh=meshx)
+    raise SystemExit("expected a ValueError for a missing mesh axis")
+except ValueError:
+    pass
+print("SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_tiled_apply_matches_single_device():
+    # JAX_PLATFORMS=cpu: without it, a host that ships libtpu spends minutes
+    # probing for TPU metadata inside the scrubbed subprocess environment.
+    r = subprocess.run([sys.executable, "-c", _SHARDED_PROGRAM],
+                       capture_output=True, text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
+    assert "SHARDED_OK" in r.stdout, r.stdout + r.stderr
