@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import SMOKE, row, time_call
+from benchmarks.common import SMOKE, row, time_call, time_pair
 from repro.core import mesh as mesh_lib
 from repro.kernels import ops, ref
 
@@ -358,6 +358,84 @@ def tiled_apply_grid(n=64, tile=16, batch=256) -> list[str]:
                 f"pallas_calls 2 vs {2 * to * ti}")]
 
 
+def deepgrid_fwd_bwd(n=64, tile=16, n_layers=4, batches=None) -> list[str]:
+    """Deep tiled-network megakernel vs the per-layer tile-grid composition.
+
+    The baseline composes L tile-grid megakernels (each already ONE
+    pallas_call per direction) with the inter-layer power detection in
+    plain JAX — L-1 activation round trips through HBM plus 2L kernel
+    launches per direction.  The deep kernel runs the whole L x To x Ti
+    cascade in ONE pallas_call per direction, detecting and re-injecting
+    between layers inside VMEM; only the per-layer stage planes leave the
+    kernel (as VJP residuals — the same count the composition stores).
+    ``deepgrid_fwd_bwd_n64_l4`` (B=1024) is a CI gate row, so that
+    configuration does NOT shrink under BENCH_SMOKE.
+    """
+    from repro.kernels.ops import deep_apply, tiled_apply
+
+    batches = batches or ((1024,) if SMOKE else (256, 1024))
+    g = n // tile
+    plan = mesh_lib.clements_plan(tile)
+    layers = []
+    for l in range(n_layers):
+        lrows = []
+        for o in range(g):
+            trow = []
+            for i in range(g):
+                kv, ku, ka = jax.random.split(jax.random.fold_in(
+                    jax.random.PRNGKey(7), (l * g + o) * g + i), 3)
+                trow.append({
+                    "v": mesh_lib.init_mesh_params(kv, plan),
+                    "u": mesh_lib.init_mesh_params(ku, plan),
+                    "atten": jax.random.uniform(ka, (tile,), minval=0.2,
+                                                maxval=0.9),
+                    "scale": 1.0 + 0.05 * (o + i + l),
+                })
+            lrows.append(tuple(trow))
+        layers.append(tuple(lrows))
+    layers = tuple(layers)
+    w = 1.0 + jnp.arange(n, dtype=jnp.float32)  # break |.|-degeneracy
+
+    def per_layer(ls, xx):
+        h = xx
+        for tiles in ls:
+            h = jnp.abs(tiled_apply(tiles, h, n=tile))
+        return h
+
+    def loss_deep(ls, xx):
+        return jnp.sum(deep_apply(ls, xx, n=tile) * w)
+
+    def loss_pl(ls, xx):
+        return jnp.sum(per_layer(ls, xx) * w)
+
+    deep_fn = jax.jit(jax.grad(loss_deep))
+    pl_fn = jax.jit(jax.grad(loss_pl))
+    rows = []
+    for batch in batches:
+        x = jax.random.normal(jax.random.PRNGKey(0), (batch, n))
+        # interleaved min-of-7: the B=1024 row is a differential CI gate
+        # on a shared runner, so both sides must sample the same load
+        us_d, us_p = time_pair(deep_fn, pl_fn, layers, x)
+        gd, gp = deep_fn(layers, x), pl_fn(layers, x)
+        scale_ref = max(float(jnp.max(jnp.abs(gr)))
+                        for gr in jax.tree.leaves(gp))
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(jax.tree.leaves(gd), jax.tree.leaves(gp)))
+        rel = err / (scale_ref + 1e-30)
+        # fusion win: boundary activations (write + fwd read + bwd read
+        # per boundary) never touch HBM, and 2L-2 fewer launches/direction
+        boundary = 3 * (n_layers - 1) * batch * n * 4
+        name = (f"deepgrid_fwd_bwd_n{n}_l{n_layers}" if batch == 1024
+                else f"deepgrid_fwd_bwd_n{n}_l{n_layers}_b{batch}")
+        rows.append(row(name, us_d,
+                        f"per_layer_us={us_p:.1f};layers={n_layers};"
+                        f"grid={g}x{g};tile={tile};batch={batch};"
+                        f"max_grad_rel_err={rel:.1e};"
+                        f"interlayer_hbm_bytes 0 vs {boundary};"
+                        f"pallas_calls 2 vs {2 * n_layers}"))
+    return rows
+
+
 def tiled_apply_sharded(n=64, tile=16, batch=256) -> list[str]:
     """shard_map scale-out of the tile-grid megakernel vs single-device.
 
@@ -488,5 +566,5 @@ def flash_attention_kernel(s=None, hd=64, h=4, b=2) -> list[str]:
 
 ALL = [mesh_kernel_sweep, fused_rfnn_linear, mesh_kernel_fwd_bwd,
        mesh_fwd_bwd_nonideal, mc_yield_sweep, rfnn_linear_fwd_bwd,
-       net_fwd_bwd, tiled_apply_grid, tiled_apply_sharded, compile_apply,
-       flash_attention_kernel]
+       net_fwd_bwd, tiled_apply_grid, deepgrid_fwd_bwd,
+       tiled_apply_sharded, compile_apply, flash_attention_kernel]

@@ -14,7 +14,11 @@ baseline — the regressions this repo's kernels exist to prevent:
   (``ref_apply_us``);
 * ``tiled_apply_n64`` — the tile-grid megakernel (one pallas_call per
   direction for a 64x64 matmul on a 4x4 grid of 16x16 analog tiles)
-  must beat the double-vmapped per-tile composition (``per_tile_us``).
+  must beat the double-vmapped per-tile composition (``per_tile_us``);
+* ``deepgrid_fwd_bwd_n64_l4`` — the deep tiled-network megakernel (one
+  pallas_call per direction for a 4-layer 64x64 cascade, inter-layer
+  detection in VMEM) must beat the per-layer tile-grid composition
+  (``per_layer_us``).
 
 With ``--prev PREV.json`` it additionally diffs each timed row against a
 previous run (the committed ``BENCH_kernels.json`` trajectory).  For the
@@ -48,6 +52,7 @@ GATED_ROWS = {
     "net_fwd_bwd_n16_b1024": "per_layer_us",
     "compile_apply_n16": "ref_apply_us",
     "tiled_apply_n64": "per_tile_us",
+    "deepgrid_fwd_bwd_n64_l4": "per_layer_us",
 }
 
 #: rows exempt from the hard --prev gate even if they ever join

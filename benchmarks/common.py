@@ -32,6 +32,30 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 10,
     return (times[0] if reduce == "min" else times[len(times) // 2]) * 1e6
 
 
+def time_pair(fn_a, fn_b, *args, warmup: int = 1,
+              iters: int = 7) -> tuple[float, float]:
+    """Interleaved differential timing: min-of-``iters`` for two calls.
+
+    Alternating A/B reps inside one loop makes the two estimates sample
+    the same machine-load trajectory, so slow drift on a shared runner
+    cancels out of the A/B ratio — the property the hard perf gates
+    (``benchmarks.check_gate``) actually test.  Non-interleaved min-of-3
+    was observed to flip a ~10% true margin on a loaded host.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a(*args))
+        jax.block_until_ready(fn_b(*args))
+    t_a, t_b = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        t_a.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        t_b.append(time.perf_counter() - t0)
+    return min(t_a) * 1e6, min(t_b) * 1e6
+
+
 def row(name: str, us_per_call: float | None, derived: str) -> str:
     us = "" if us_per_call is None else f"{us_per_call:.1f}"
     return f"{name},{us},{derived}"

@@ -21,6 +21,14 @@ lowered onto ONE tile-grid megakernel call:
     compiled = lower_tiled(tp)
     y = compiled.apply(x)                  # one fused pallas_call
 
+A multi-layer cascade of tile grids lowers onto ONE deep megakernel —
+inter-layer detection happens in VMEM, no HBM round-trips between
+layers (Sec. V depth scale-up):
+
+    tps = [pipeline(w) for w in [w1, w2, w3, w4]]   # per-layer tiled passes
+    compiled = lower_deep(tps)
+    y = compiled.apply(x)                  # one pallas_call, L layers deep
+
 Yield-aware fault tolerance (compile/placement.py + runtime/elastic.py):
 place high-sensitivity tiles on high-yield physical positions before
 calibration, and remap + re-trim the grid around dead tiles:
@@ -48,6 +56,7 @@ from repro.compile.passes import (
     calibrate,
     calibrate_tiled,
     lower,
+    lower_deep,
     lower_tiled,
     program,
     program_tiled,
@@ -59,6 +68,7 @@ from repro.compile.passes import (
 )
 from repro.compile.program import (
     AnalogProgram,
+    CompiledDeepProgram,
     CompiledProgram,
     CompiledTiledProgram,
     ProgramLayer,
@@ -68,10 +78,11 @@ from repro.compile.program import (
 )
 
 __all__ = [
-    "AnalogProgram", "CompiledProgram", "CompiledTiledProgram",
+    "AnalogProgram", "CompiledDeepProgram", "CompiledProgram",
+    "CompiledTiledProgram",
     "ProgramLayer", "TiledAnalogProgram", "TilePlacement",
     "apply_placement", "blank_tile", "calibrate", "calibrate_tiled",
-    "layer_matrix", "lower", "lower_tiled", "plan_placement",
+    "layer_matrix", "lower", "lower_deep", "lower_tiled", "plan_placement",
     "position_yield_scores", "program", "program_tiled", "program_error",
     "quantize", "quantize_tiled", "recover_tiled", "resolve_codebook",
     "synthesize", "synthesize_tiled", "tile_sensitivities",

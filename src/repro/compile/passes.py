@@ -23,10 +23,12 @@ The pipeline mirrors the paper's digital->analog transfer (Fig. 11):
   ``ops.mesh_apply(hardware=...)`` with frozen per-device noise-draw keys
   — the same ``imperfect_cell_matrix`` + key consumption as the reference
   path, so calibration and serving see the device draw-for-draw.
-* :func:`lower` — emit the megakernel inputs (``NetworkSchedule`` +
-  stacked ``[L, C, 8, P]`` coefficients) through the existing
-  ``ops.pack_network`` leaf-identity cache and return a
-  :class:`CompiledProgram` whose ``apply`` is pure kernel execution.
+* :func:`lower` — emit the megakernel inputs (an L x 1 x 1
+  ``DeepGridSchedule`` + stacked ``[L, 1, 1, C, 8, P]`` coefficients)
+  through the existing ``ops.pack_network`` leaf-identity cache and
+  return a :class:`CompiledProgram` whose ``apply`` is pure kernel
+  execution.  :func:`lower_deep` lowers a *chain* of tiled programs onto
+  one ``L x To x Ti`` deep megakernel (:class:`CompiledDeepProgram`).
 """
 
 from __future__ import annotations
@@ -39,6 +41,7 @@ import numpy as np
 
 from repro.compile.program import (
     AnalogProgram,
+    CompiledDeepProgram,
     CompiledProgram,
     CompiledTiledProgram,
     ProgramLayer,
@@ -388,8 +391,8 @@ def lower(prog: AnalogProgram, *, block_b: int | None = None,
 
     Builds the per-layer kernel argument dicts (device-snapped phases,
     attenuation, digital gamma, bound noise keys), then emits the
-    :class:`NetworkSchedule` and the stacked ``[L, C, 8, P]`` coefficient
-    tensors through ``ops.pack_network`` — the same leaf-identity pack
+    L x 1 x 1 :class:`DeepGridSchedule` and the stacked
+    ``[L, 1, 1, C, 8, P]`` coefficient tensors through ``ops.pack_network`` — the same leaf-identity pack
     cache the serving path reads, so the tensors are packed exactly once,
     here, and every subsequent ``apply`` (and every serving tick) finds
     them already resident.
@@ -405,15 +408,7 @@ def lower(prog: AnalogProgram, *, block_b: int | None = None,
     layer_args = []
     plans = []
     for la in prog.layers:
-        args = {
-            "v": la.device_params("v"),
-            "u": la.device_params("u"),
-            "atten": jnp.asarray(la.attenuation, jnp.float32),
-            "scale": jnp.asarray(la.scale, jnp.float32),
-        }
-        if hardware is not None and la.key_v is not None:
-            args["key_v"], args["key_u"] = la.key_v, la.key_u
-        layer_args.append(args)
+        layer_args.append(_tile_kernel_args(la, hardware))
         plans.append((la.v_plan, la.u_plan))
     layer_args = tuple(layer_args)
     plans = tuple(plans)
@@ -541,20 +536,8 @@ def lower_tiled(tp: TiledAnalogProgram, *, block_b: int | None = None,
     hardware = next(iter(hardwares))
     tile_args, plans = [], []
     for row in tp.grid:
-        arow, prow = [], []
-        for la in row:
-            args = {
-                "v": la.device_params("v"),
-                "u": la.device_params("u"),
-                "atten": jnp.asarray(la.attenuation, jnp.float32),
-                "scale": jnp.asarray(la.scale, jnp.float32),
-            }
-            if hardware is not None and la.key_v is not None:
-                args["key_v"], args["key_u"] = la.key_v, la.key_u
-            arow.append(args)
-            prow.append((la.v_plan, la.u_plan))
-        tile_args.append(tuple(arow))
-        plans.append(tuple(prow))
+        tile_args.append(tuple(_tile_kernel_args(la, hardware) for la in row))
+        plans.append(tuple((la.v_plan, la.u_plan) for la in row))
     tile_args, plans = tuple(tile_args), tuple(plans)
     grid, packed = kernel_ops.pack_tile_grid(tile_args, n=tp.tile,
                                              plans=plans, hardware=hardware)
@@ -563,4 +546,113 @@ def lower_tiled(tp: TiledAnalogProgram, *, block_b: int | None = None,
         to=tp.to, ti=tp.ti, plans=plans, tile_args=tile_args,
         hardware=hardware, grid=grid, packed=packed,
         block_b=block_b, interpret=interpret, placement=tp.placement,
+        mesh=mesh, row_axis=row_axis, data_axis=data_axis)
+
+
+# ---------------------------------------------------------------------------
+# Deep pipeline: a multi-layer cascade of tile grids on ONE megakernel
+# ---------------------------------------------------------------------------
+
+def _tile_kernel_args(la: ProgramLayer, hardware) -> dict:
+    """The kernel argument dict of one programmed tile (shared by the
+    network / tile-grid / deep-grid lowerings)."""
+    args = {
+        "v": la.device_params("v"),
+        "u": la.device_params("u"),
+        "atten": jnp.asarray(la.attenuation, jnp.float32),
+        "scale": jnp.asarray(la.scale, jnp.float32),
+    }
+    if hardware is not None and la.key_v is not None:
+        args["key_v"], args["key_u"] = la.key_v, la.key_u
+    return args
+
+
+def lower_deep(progs, *, block_b: int | None = None,
+               interpret: bool | None = None, mesh=None,
+               row_axis: str = "rows",
+               data_axis: str = "data") -> CompiledDeepProgram:
+    """Lower a cascade of programmed tile grids onto ONE deep megakernel.
+
+    ``progs`` is a sequence of :class:`TiledAnalogProgram` — layer ``l``'s
+    ``To`` tile rows feed layer ``l+1``'s ``Ti`` input tiles, so adjacent
+    layers must chain (``prev.to == next.ti``, ``prev.out_dim ==
+    next.in_dim``) and every tile shares one tile size and one hardware
+    binding.  The result's ``apply`` is a single ``pallas_call`` per
+    direction over the whole ``L x To x Ti`` cascade: combined row
+    outputs are power-detected and re-injected into the next layer's
+    tiles inside VMEM, which is exactly the physical cascade — the
+    intermediate channels ride analog, with no digital truncation or
+    masking between layers (compose per-layer ``lower_tiled`` programs
+    if you need that).
+
+    Placements fold into the single launch instead of costing per-layer
+    digital gathers: the first layer's column permutation becomes the
+    input gather, the last layer's row permutation the output gather,
+    and every *interior* boundary is resolved at pack time by re-ordering
+    the next layer's packed tile columns into the previous layer's
+    physical row order (each tile keeps its own calibration draw — the
+    re-order is a compile-time re-placement of interior columns, not a
+    re-trim).
+    """
+    progs = tuple(progs)
+    if not progs:
+        raise ValueError("lower_deep needs at least one tiled layer program")
+    tile = progs[0].tile
+    for l, tp in enumerate(progs):
+        if not tp.programmed:
+            raise ValueError(f"lower_deep: layer {l} is not fully programmed "
+                             "— run the `program_tiled` pass first")
+        if tp.tile != tile:
+            raise ValueError("all layers must share one tile size, got "
+                             f"{[t.tile for t in progs]}")
+    for l in range(len(progs) - 1):
+        prev, nxt = progs[l], progs[l + 1]
+        if prev.to != nxt.ti:
+            raise ValueError(
+                f"deep program does not chain: layer {l} emits To={prev.to} "
+                f"tile rows but layer {l + 1} expects Ti={nxt.ti} input tiles")
+        if prev.out_dim != nxt.in_dim:
+            raise ValueError(
+                f"deep program does not chain: layer {l} out_dim "
+                f"{prev.out_dim} feeds layer {l + 1} in_dim {nxt.in_dim}")
+    hardwares = {la.hardware for tp in progs for row in tp.grid for la in row}
+    if len(hardwares) > 1:
+        raise ValueError("all tiles must share one hardware binding, got "
+                         f"{hardwares}")
+    hardware = next(iter(hardwares))
+
+    layer_args, layer_plans = [], []
+    prev_rows = None  # logical tile row carried by incoming physical block j
+    for l, tp in enumerate(progs):
+        pl = tp.placement
+        if l == 0:
+            order = list(range(tp.ti))
+        else:
+            # incoming physical block j carries the previous layer's logical
+            # row prev_rows[j]; the tile consuming that logical column sits
+            # at this layer's physical column inv_col_perm[prev_rows[j]]
+            src = prev_rows if prev_rows is not None else list(range(tp.ti))
+            inv_col = (list(pl.inv_col_perm) if pl is not None
+                       else list(range(tp.ti)))
+            order = [inv_col[c] for c in src]
+        grid_args, grid_plans = [], []
+        for row in tp.grid:
+            grid_args.append(tuple(
+                _tile_kernel_args(row[j], hardware) for j in order))
+            grid_plans.append(tuple(
+                (row[j].v_plan, row[j].u_plan) for j in order))
+        layer_args.append(tuple(grid_args))
+        layer_plans.append(tuple(grid_plans))
+        prev_rows = list(pl.row_perm) if pl is not None else None
+    layer_args = tuple(layer_args)
+    layer_plans = tuple(layer_plans)
+    deep, packed = kernel_ops.pack_deep_grid(layer_args, n=tile,
+                                             plans=layer_plans,
+                                             hardware=hardware)
+    return CompiledDeepProgram(
+        out_dim=progs[-1].out_dim, in_dim=progs[0].in_dim, tile=tile,
+        depth=len(progs), to=progs[-1].to, ti=progs[0].ti,
+        plans=layer_plans, layer_args=layer_args, hardware=hardware,
+        deep=deep, packed=packed, block_b=block_b, interpret=interpret,
+        in_placement=progs[0].placement, out_placement=progs[-1].placement,
         mesh=mesh, row_axis=row_axis, data_axis=data_axis)

@@ -14,18 +14,24 @@ serving kernels.  This module holds the IR those passes transform:
 * :class:`AnalogProgram` — an L-layer stack of those (one entry for a
   single matrix).
 * :class:`CompiledProgram` — the ``lower`` pass output: a static
-  :class:`~repro.kernels.schedule.NetworkSchedule` plus the stacked
-  ``[L, C, 8, P]`` megakernel coefficients, pre-emitted through the pack
-  cache so ``apply`` is pure kernel execution with zero packing work.
+  L x 1 x 1 :class:`~repro.kernels.schedule.DeepGridSchedule` plus the
+  stacked ``[L, 1, 1, C, 8, P]`` megakernel coefficients, pre-emitted
+  through the pack cache so ``apply`` is pure kernel execution with zero
+  packing work.
 * :class:`TiledAnalogProgram` — a (To x Ti) grid of per-tile-SVD
   :class:`ProgramLayer`\\ s realizing one large matrix as block sums (the
   paper's Sec. V scale-up story); the per-tile passes
   (``program_tiled``/``quantize_tiled``/``calibrate_tiled``) map the
   single-layer pipeline over every tile independently.
 * :class:`CompiledTiledProgram` — the ``lower_tiled`` output: a static
-  :class:`~repro.kernels.schedule.TileGridSchedule` plus the stacked
-  ``[To, Ti, C, 8, P]`` tile-grid tensors; ``apply`` is one tile-grid
-  megakernel call (all To*Ti meshes swept and row-combined in VMEM).
+  1 x To x Ti :class:`~repro.kernels.schedule.DeepGridSchedule` plus the
+  stacked ``[1, To, Ti, C, 8, P]`` tile-grid tensors; ``apply`` is one
+  tile-grid megakernel call (all To*Ti meshes swept and row-combined in
+  VMEM).
+* :class:`CompiledDeepProgram` — the ``lower_deep`` output: an L-layer
+  *cascade* of tile grids on one ``[L, To, Ti, C, 8, P]`` deep
+  megakernel — ``apply`` is a single launch for the whole network,
+  inter-layer detection in VMEM, placements folded into the launch.
 
 The IR is deliberately host-side (frozen dataclasses, not pytrees): passes
 return new programs, and only ``lower`` touches the device.
@@ -43,7 +49,7 @@ from repro.core import hardware as hw_lib
 from repro.core import mesh as mesh_lib
 from repro.core import quantize as q_lib
 from repro.kernels import ops as kernel_ops
-from repro.kernels.schedule import NetworkSchedule
+from repro.kernels.schedule import DeepGridSchedule
 
 Array = jax.Array
 
@@ -293,8 +299,8 @@ class CompiledProgram:
     plans: tuple
     layer_args: tuple
     hardware: hw_lib.HardwareModel | None
-    net: NetworkSchedule
-    packed: tuple                # (coef_v [L,C,8,P], coef_u, gains [L,12,P])
+    net: DeepGridSchedule        # L x 1 x 1 deep-grid schedule
+    packed: tuple                # (coef_v [L,1,1,C,8,P], coef_u, gains)
     block_b: int | None = None
     interpret: bool | None = None
 
@@ -336,7 +342,7 @@ class CompiledTiledProgram:
     plans: tuple                 # [To][Ti] of (v_plan, u_plan)
     tile_args: tuple             # [To][Ti] of kernel argument dicts
     hardware: hw_lib.HardwareModel | None
-    grid: "object"               # TileGridSchedule (static)
+    grid: "object"               # 1 x To x Ti DeepGridSchedule (static)
     packed: tuple                # (coef_v [To,Ti,8*,P], coef_u, gains)
     block_b: int | None = None
     interpret: bool | None = None
@@ -384,3 +390,82 @@ class CompiledTiledProgram:
     def n_cells(self) -> int:
         return sum(vp.n_cells + up.n_cells
                    for row in self.plans for vp, up in row)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledDeepProgram:
+    """The ``lower_deep`` pass output: a whole multi-layer tiled network,
+    one megakernel launch per direction.
+
+    ``deep``/``packed`` are the ``ops.pack_deep_grid`` result emitted at
+    lower time — every ``apply`` hands them straight back to
+    :func:`repro.kernels.ops.deep_apply` (``packed=``), so serving does
+    **zero** packing work, first tick included.  Inter-layer activations
+    never leave VMEM: the kernel re-detects each layer's combined row
+    magnitudes in place and feeds them to the next layer's tiles — the
+    fully-analog cascade, with no digital stop between layers.
+
+    Placements fold into the packed tensors: layer 0's column placement
+    is undone by a digital input gather and the last layer's row
+    placement by a digital output gather (exactly like
+    :class:`CompiledTiledProgram`), while every *interior* boundary was
+    resolved at pack time — each layer ``l >= 1`` packs its tile columns
+    in the physical row order of layer ``l - 1``'s outputs, so the
+    in-kernel handoff needs no permutation at all.  Per-tile calibration
+    keys ride inside ``layer_args`` untouched.
+    """
+
+    out_dim: int
+    in_dim: int
+    tile: int
+    depth: int
+    to: int
+    ti: int
+    plans: tuple                 # [L][To][Ti] of (v_plan, u_plan)
+    layer_args: tuple            # [L][To][Ti] of kernel argument dicts
+    hardware: hw_lib.HardwareModel | None
+    deep: "object"               # DeepGridSchedule (static)
+    packed: tuple                # (coef_v [L,To,Ti,C,8,P], coef_u, gains)
+    block_b: int | None = None
+    interpret: bool | None = None
+    # layer 0's placement (input gather) and the last layer's placement
+    # (output gather); interior placements are already folded into packed
+    in_placement: "object | None" = None
+    out_placement: "object | None" = None
+    # optional (tile-row x batch) scale-out through deep_apply's
+    # shard_map path (depth runs as a chain of single-layer launches)
+    mesh: "object | None" = None
+    row_axis: str = "rows"
+    data_axis: str = "data"
+
+    def apply(self, x: Array) -> Array:
+        """``x[..., in_dim]`` -> detected magnitudes ``[..., out_dim]``.
+
+        One fused deep-grid ``pallas_call``: every layer's tiles sweep,
+        rows combine coherently, the detector reads each layer's rows in
+        VMEM and feeds the next — the paper's multi-layer microwave ANN
+        scale-up as a single forward (and a single backward) launch.
+        """
+        xc = _prep_input(x, self.in_dim, self.ti * self.tile)
+        pin = self.in_placement
+        if pin is not None and not pin.is_identity:
+            xt = xc.reshape(xc.shape[:-1] + (self.ti, self.tile))
+            xc = jnp.take(xt, jnp.asarray(pin.col_perm), axis=-2).reshape(
+                xc.shape)
+        y = kernel_ops.deep_apply(
+            self.layer_args, xc, n=self.tile, plans=self.plans,
+            hardware=self.hardware, block_b=self.block_b,
+            interpret=self.interpret, packed=(self.deep, self.packed),
+            readout="magnitude", mesh=self.mesh, row_axis=self.row_axis,
+            data_axis=self.data_axis)
+        pout = self.out_placement
+        if pout is not None and not pout.is_identity:
+            yt = y.reshape(y.shape[:-1] + (self.to, self.tile))
+            y = jnp.take(yt, jnp.asarray(pout.inv_row_perm),
+                         axis=-2).reshape(y.shape)
+        return y[..., : self.out_dim]
+
+    def n_cells(self) -> int:
+        return sum(vp.n_cells + up.n_cells
+                   for grid in self.plans for row in grid
+                   for vp, up in row)

@@ -3,12 +3,12 @@
 givens_mesh      — the paper's mesh MVM (columns of arbitrary 2x2 complex
                    cells — ideal or hardware-imperfect), forward and
                    backward (custom-VJP kernels, DESIGN.md), up to the
-                   whole-network megakernel (all L RFNN layers in one
-                   pallas_call per direction)
+                   deep tiled-network megakernel (an L-layer cascade of
+                   (To x Ti) tile grids in one pallas_call per direction)
 schedule         — static parity-column schedules lowering any adjacent-pair
                    MeshPlan (Clements, Reck, packed) onto the kernels;
-                   NetworkSchedule stacks per-layer (V, U) pairs for the
-                   megakernel
+                   DeepGridSchedule stacks the [L][To][Ti] grid of (V, U)
+                   pairs for the megakernel
 flash_attention  — fused attention (motivated by the roofline's memory term)
 ops              — jitted, differentiable public wrappers
 ref              — pure-jnp oracles (the allclose ground truth)

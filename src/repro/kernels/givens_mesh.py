@@ -25,14 +25,16 @@ Kernels:
   * ``rfnn_linear_kernel`` — fused analog linear layer
     V-mesh -> diag gain -> U-mesh -> |detect| (paper Eq. 31 + Fig. 14),
     one VMEM residency for the whole layer.
-  * ``network_kernel`` — the whole L-layer RFNN (stacked per-layer
-    coefficient/parity/gain tensors) in one VMEM residency: inter-layer
-    activations never touch HBM, the TPU analogue of the paper's
-    end-to-end analog signal path (Sec. V).
-  * ``tilegrid_kernel`` — a (To x Ti) grid of analog tile processors
-    realizing a large blocked matmul (Sec. V scale-up): per grid step one
-    tile row sweeps every input tile and coherently combines the row's
-    outputs in VMEM (matched-line power combiner).
+  * ``deepgrid_kernel`` — the general deep tiled network: L layers, each
+    a (To x Ti) grid of analog tile processors, in ONE VMEM residency.
+    Every layer sweeps all input tiles through their meshes, coherently
+    combines each tile row's outputs (matched-line power combiner) and
+    re-detects the combined rows in VMEM to feed the next layer — zero
+    inter-layer HBM traffic, the TPU analogue of the paper's end-to-end
+    analog signal path (Sec. V, incl. the 4-layer MNIST scale-up).  The
+    L-layer single-mesh RFNN (L x 1 x 1) and the one-layer tile grid
+    (1 x To x Ti) are its degenerate cases — there are no separate
+    network/tile-grid kernels.
   * ``mesh_bwd_kernel`` / ``rfnn_linear_bwd_kernel`` — the custom VJPs.
     The backward pass re-runs the column sequence *in reverse*, carrying
     two coefficient tensors: the per-cell analytic **2x2 inverse** rebuilds
@@ -508,95 +510,288 @@ def rfnn_linear_bwd_pallas_call(n: int, n_cols_v: int, n_cols_u: int,
 
 
 # ---------------------------------------------------------------------------
-# Network megakernel: the whole L-layer RFNN in one VMEM residency
+# Deep tiled-network megakernel: L layers of a (To x Ti) tile grid in one
+# VMEM residency
 # ---------------------------------------------------------------------------
 #
-# Per layer: pre-gain g0 (input phase screens) -> V-mesh -> mid gain g1
-# (attenuation + folded screens) -> U-mesh -> post gain g2 (digital scale +
-# output screen) -> |detect|; the detected magnitudes re-enter the next
-# layer as a real signal (zero imaginary planes) without ever leaving VMEM —
-# the TPU analogue of the paper's end-to-end analog signal path (Sec. V,
-# Fig. 14).  Gains are [L, 12, P]: rows 0-3 g0, 4-7 g1, 8-11 g2, each as
-# (even re, even im, odd re, odd im).  Coefficients/parities are stacked
-# [L, C, 8, P] / [L, C, 1] with identity-column padding (see
-# ``repro.kernels.schedule.NetworkSchedule``).
+# The general form of the paper's Sec. V scale-up: a deep network whose
+# every layer is a (To x Ti) grid of analog tile processors realizing a
+# large blocked matmul.  Per tile: pre-gain g0 (input phase screens) ->
+# V-mesh -> mid gain g1 (attenuation + folded screens) -> U-mesh -> post
+# gain g2 (digital scale + output screen); the Ti complex outputs of each
+# tile row are summed in VMEM (matched-line power combiner) and the
+# combined row magnitudes are re-detected *inside the kernel* to feed the
+# next layer as a real signal (zero imaginary planes) — inter-layer
+# activations never touch HBM.  Gains are [L, To, Ti, 12, P]: rows 0-3
+# g0, 4-7 g1, 8-11 g2, each as (even re, even im, odd re, odd im).
+# Coefficients/parities stack to [L, To, Ti, C, 8, P] / [L, To, Ti, C, 1]
+# with identity-column padding to the network-wide C (see
+# ``repro.kernels.schedule.DeepGridSchedule``).  The pallas grid is the
+# batch alone — inter-layer re-detection needs every row of a layer, so
+# one grid step carries one batch block through the entire network.
+#
+# The grid's To*Ti tiles are NOT unrolled: a layer's tiles are
+# independent sweeps over the same (padded) column count, so the body
+# stacks them into [B, To, Ti, P] planes and runs ONE column sweep per
+# mesh stage with [To, Ti, 8, P] coefficient slabs broadcast over the
+# batch.  The per-column even/odd pairing becomes a branch-free
+# parity-masked select (the rotation math runs once per lane; parity
+# only reroutes operands and results), so tiles with *different* column
+# parities — mixed Reck/Clements grids — coexist in one stacked sweep.
+# Only the L layer steps unroll (each depends on the previous layer's
+# detected rows), keeping the emitted program O(L * C) vector ops
+# instead of O(L * To * Ti * C) scalar-tile ops.
+#
+# In-kernel re-detection between layers is *exact*, not an approximation:
+# the combined row output z is held coherently in VMEM, so |z| computed
+# in-kernel is the same value the per-layer composition computes after
+# its HBM round trip — same op order (multiply, add, sqrt), same floats.
+#
+# The last layer's readout is a static kernel variant (``detect_last``):
+# True emits the detected magnitudes (the network/MNIST readout), False
+# emits the combined complex planes (the tile-grid readout, where |.|,
+# Re, and detector noise compose outside).  Both share the same sweep.
 #
 # Residuals follow the single-layer kernel's rule: everything inside a
 # mesh is recomputed by the reversed inverse/adjoint sweep (no per-column
-# state), but |z| is not invertible, so each layer saves its two pre-gain
-# stage boundaries (post-V, post-U) — 8 stacked [L, B, P] planes total,
-# identical to what the per-layer composition would have stored, minus all
-# the inter-layer HBM round trips and per-layer kernel launches.  The
-# layer-boundary activations themselves are NOT stored: a layer's input is
-# re-detected from the *previous* layer's saved post-U state (one cheap
-# elementwise |g2 u| — no sweep), so the megakernel adds zero residual
-# traffic over the per-layer path while fusing L layers into one call.
+# state), but |z| is not invertible, so each tile saves its two pre-gain
+# stage boundaries (post-V, post-U) — 8 stacked [L, B, To, Ti, P] planes
+# total (batch-block axis second, so the stacked sweep saves whole
+# slabs), identical to what the per-layer / per-tile composition would
+# have stored, minus all the inter-layer HBM round trips and per-layer
+# kernel launches.  The layer-boundary activations themselves are NOT
+# stored: a layer's input is re-detected from the *previous* layer's
+# saved post-U states (one cheap elementwise |sum_i g2 u_i| per row — no
+# sweep), and the backward unwinds layers in reverse, converting the
+# row-combine's transpose (every tile of a row sees the row's cotangent;
+# each input tile sums its cotangent over rows) entirely in VMEM.
+
+
+def _vshift_down(x):
+    """x[..., p] <- x[..., p+1] (zero into the last lane)."""
+    return jnp.concatenate([x[..., 1:], jnp.zeros_like(x[..., :1])],
+                           axis=-1)
+
+
+def _vshift_up(x, first):
+    """x[..., p] <- x[..., p-1], lane 0 taken from ``first``."""
+    return jnp.concatenate([first[..., :1], x[..., :-1]], axis=-1)
+
+
+def _vlast(x, last):
+    """x with its last lane replaced from ``last``."""
+    return jnp.concatenate([x[..., :-1], last[..., -1:]], axis=-1)
+
+
+def _vcolumn_even(cc, state):
+    """Even column over stacked tile planes: rotate (e_p, o_p) in place."""
+    er, ei, orr, oi = state
+    c = [cc[..., k, :] for k in range(8)]
+    return _rotate(c, er, ei, orr, oi)
+
+
+def _vcolumn_odd(cc, state):
+    """Odd column: rotate (o_p, e_{p+1}); the two wrap lanes pass
+    through (odd columns hold no cell in the wrap-around pair)."""
+    er, ei, orr, oi = state
+    c = [cc[..., k, :] for k in range(8)]
+    a2r, a2i, b2r, b2i = _rotate(c, orr, oi,
+                                 _vshift_down(er), _vshift_down(ei))
+    return (_vshift_up(b2r, er), _vshift_up(b2i, ei),
+            _vlast(a2r, orr), _vlast(a2i, oi))
+
+
+def _vcolumn_mixed(cc, odd, state):
+    """Parity-masked column for grids whose tiles disagree on this
+    column's pairing (e.g. Reck next to Clements).  Branch-free: the
+    rotation math runs exactly once per lane; the [To, Ti, 1] ``odd``
+    mask only reroutes operands and results, so both pairings coexist
+    in one stacked sweep."""
+    er, ei, orr, oi = state
+    c = [cc[..., k, :] for k in range(8)]
+    ar = jnp.where(odd, orr, er)
+    ai = jnp.where(odd, oi, ei)
+    br = jnp.where(odd, _vshift_down(er), orr)
+    bi = jnp.where(odd, _vshift_down(ei), oi)
+    a2r, a2i, b2r, b2i = _rotate(c, ar, ai, br, bi)
+    ner = jnp.where(odd, _vshift_up(b2r, er), a2r)
+    nei = jnp.where(odd, _vshift_up(b2i, ei), a2i)
+    nor = jnp.where(odd, _vlast(a2r, orr), b2r)
+    noi = jnp.where(odd, _vlast(a2i, oi), b2i)
+    return ner, nei, nor, noi
+
+
+def _parity_code(par_c):
+    """0 = all tiles even, 1 = all odd, 2 = mixed, for one [To, Ti, 1]
+    parity column."""
+    odd = par_c != 0
+    return jnp.where(jnp.all(odd), jnp.int32(1),
+                     jnp.any(odd).astype(jnp.int32) * 2)
+
+
+def _vcolumn(cc, par_c, state):
+    """One mesh column over stacked tile planes [B, To, Ti, P]: ``cc``
+    the column's [To, Ti, 8, P] coefficient slab (broadcast over the
+    batch), ``par_c`` its [To, Ti, 1] parity column.  Uniform columns —
+    the only kind single-plan grids ever see — dispatch to the mask-free
+    even/odd bodies; the masked select only runs when tiles disagree."""
+    return jax.lax.switch(
+        _parity_code(par_c),
+        [lambda s: _vcolumn_even(cc, s),
+         lambda s: _vcolumn_odd(cc, s),
+         lambda s: _vcolumn_mixed(cc, par_c != 0, s)],
+        state)
+
+
+def _vrun_columns(coef, parity, state):
+    """Stacked-tile column sweep: ``coef`` [To, Ti, C, 8, P], ``parity``
+    [To, Ti, C, 1], state planes [B, To, Ti, P] (batch-materialized —
+    fori_loop carries must be full-shape)."""
+    coef = jnp.moveaxis(coef, 2, 0)       # [C, To, Ti, 8, P]
+    parity = jnp.moveaxis(parity, 2, 0)   # [C, To, Ti, 1]
+
+    def body(c, s):
+        return _vcolumn(coef[c], parity[c], s)
+
+    return jax.lax.fori_loop(0, coef.shape[0], body, state)
+
+
+def _vconj_dot(xr, xi, gr, gi):
+    """Batch-summed conj(x) * g over stacked planes -> [To, Ti, P] pair."""
+    return (jnp.sum(xr * gr + xi * gi, axis=0),
+            jnp.sum(xr * gi - xi * gr, axis=0))
+
+
+def _vrows_from_pairs(a, ga, b, gb):
+    """The 8 per-coefficient conj-dot gradient rows, stacked [..., 8, P]."""
+    r0, r1 = _vconj_dot(a[0], a[1], ga[0], ga[1])
+    r2, r3 = _vconj_dot(b[0], b[1], ga[0], ga[1])
+    r4, r5 = _vconj_dot(a[0], a[1], gb[0], gb[1])
+    r6, r7 = _vconj_dot(b[0], b[1], gb[0], gb[1])
+    return jnp.stack([r0, r1, r2, r3, r4, r5, r6, r7], axis=-2)
+
+
+def _vcoef_grad_even(s_in, g_out):
+    er, ei, orr, oi = s_in
+    ger, gei, gor, goi = g_out
+    return _vrows_from_pairs((er, ei), (ger, gei), (orr, oi), (gor, goi))
+
+
+def _vcoef_grad_odd(s_in, g_out):
+    """Odd pairing: (a, b) = (o_p, e_{p+1}); the wrap lane holds no cell
+    so its gradient rows are zeroed."""
+    er, ei, orr, oi = s_in
+    ger, gei, gor, goi = g_out
+    rows = _vrows_from_pairs(
+        (orr, oi), (gor, goi),
+        (_vshift_down(er), _vshift_down(ei)),
+        (_vshift_down(ger), _vshift_down(gei)))
+    p = rows.shape[-1]
+    return jnp.where(jnp.arange(p) == p - 1, 0.0, rows)
+
+
+def _vcoef_grad_mixed(odd, s_in, g_out):
+    """Masked-pairing coefficient gradient for mixed-parity columns (the
+    same operand rerouting as :func:`_vcolumn_mixed`; odd tiles hold no
+    cell in the wrap lane, so it is zeroed)."""
+    er, ei, orr, oi = s_in
+    ger, gei, gor, goi = g_out
+    ar = jnp.where(odd, orr, er)
+    ai = jnp.where(odd, oi, ei)
+    br = jnp.where(odd, _vshift_down(er), orr)
+    bi = jnp.where(odd, _vshift_down(ei), oi)
+    gar = jnp.where(odd, gor, ger)
+    gai = jnp.where(odd, goi, gei)
+    gbr = jnp.where(odd, _vshift_down(ger), gor)
+    gbi = jnp.where(odd, _vshift_down(gei), goi)
+    rows = _vrows_from_pairs((ar, ai), (gar, gai), (br, bi), (gbr, gbi))
+    p = rows.shape[-1]
+    wrap = odd[..., None, :] & (jnp.arange(p) == p - 1)
+    return jnp.where(wrap, 0.0, rows)
+
+
+def _vbwd_column(ci_c, ca_c, par_c, s, g):
+    """One reversed column: reconstruct the column input via the inverse
+    slab, take its coefficient gradient, propagate the cotangent via the
+    adjoint slab — dispatched once per column on the parity code, so
+    uniform columns never pay the mixed path's masking."""
+    def make(step, coef_grad):
+        def branch(sg):
+            s_, g_ = sg[0:4], sg[4:8]
+            s_in = step(ci_c, s_)             # T_c^{-1} s_{c+1}
+            grad = coef_grad(s_in, g_)
+            g_in = step(ca_c, g_)             # T_c^H g_{c+1}
+            return (*s_in, grad, *g_in)
+        return branch
+
+    odd = par_c != 0
+    out = jax.lax.switch(
+        _parity_code(par_c),
+        [make(_vcolumn_even, _vcoef_grad_even),
+         make(_vcolumn_odd, _vcoef_grad_odd),
+         make(lambda cc, st: _vcolumn_mixed(cc, odd, st),
+              lambda s_in, g_: _vcoef_grad_mixed(odd, s_in, g_))],
+        (*s, *g))
+    return out[0:4], out[4], out[5:9]
+
+
+def _vrun_columns_bwd(coef_inv, coef_adj, parity, state, cot):
+    """Reversed stacked-tile sweep: recompute states via the per-cell
+    inverse, accumulate per-column coefficient gradients into a fresh
+    [To, Ti, C, 8, P] value (the caller folds it into the revisited
+    accumulator ref), propagate the cotangent via the adjoint."""
+    n_cols = coef_inv.shape[2]
+    ci = jnp.moveaxis(coef_inv, 2, 0)
+    ca = jnp.moveaxis(coef_adj, 2, 0)
+    par = jnp.moveaxis(parity, 2, 0)
+    dco = jnp.zeros(coef_inv.shape, coef_inv.dtype)
+
+    def body(k, carry):
+        c = n_cols - 1 - k
+        s, g, acc = carry[0:4], carry[4:8], carry[8]
+        s_in, grad, g_in = _vbwd_column(ci[c], ca[c], par[c], s, g)
+        acc = jax.lax.dynamic_update_slice_in_dim(
+            acc, grad[:, :, None], c, axis=2)
+        return (*s_in, *g_in, acc)
+
+    out = jax.lax.fori_loop(0, n_cols, body, (*state, *cot, dco))
+    return out[0:4], out[4:8], out[8]
 
 
 def _net_layer_stages(coef_v, par_v, coef_u, par_u, g, state):
-    """g0 -> V -> g1 -> U for one layer; returns (v, u) stage states."""
+    """g0 -> V -> g1 -> U for one stacked layer; returns (v, u) states.
+
+    ``g`` is the layer's 12 gain planes ([To, Ti, P] each), ``state``
+    the stacked [B, To, Ti, P] input planes."""
     er, ei = _cmul(state[0], state[1], g[0], g[1])
     orr, oi = _cmul(state[2], state[3], g[2], g[3])
-    v = _run_columns(coef_v, par_v, (er, ei, orr, oi))
+    v = _vrun_columns(coef_v, par_v, (er, ei, orr, oi))
     er, ei = _cmul(v[0], v[1], g[4], g[5])
     orr, oi = _cmul(v[2], v[3], g[6], g[7])
-    u = _run_columns(coef_u, par_u, (er, ei, orr, oi))
+    u = _vrun_columns(coef_u, par_u, (er, ei, orr, oi))
     return v, u
 
 
-def _net_layer_detect(u, g):
-    """g2 -> |detect| on a layer's U-stage output."""
+def _tile_z(u, g):
+    """g2 on a tile's U-stage output: the post-g2 complex planes the row
+    combiner sums."""
     zer, zei = _cmul(u[0], u[1], g[8], g[9])
     zor, zoi = _cmul(u[2], u[3], g[10], g[11])
-    oe = jnp.sqrt(zer * zer + zei * zei)
-    oo = jnp.sqrt(zor * zor + zoi * zoi)
+    return zer, zei, zor, zoi
+
+
+def _detect_z(z):
+    """|detect| on a combined post-g2 state (4 planes -> 2 magnitudes)."""
+    oe = jnp.sqrt(z[0] * z[0] + z[1] * z[1])
+    oo = jnp.sqrt(z[2] * z[2] + z[3] * z[3])
     return oe, oo
 
 
-def network_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref, gains_ref,
-                   xer_ref, xei_ref, xor_ref, xoi_ref, oe_ref, oo_ref):
-    """Inference megakernel: all L layers, one batch block, one residency."""
-    n_layers = coef_v_ref.shape[0]
-    state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
-    for l in range(n_layers):
-        v, u = _net_layer_stages(coef_v_ref[l], par_v_ref[l],
-                                 coef_u_ref[l], par_u_ref[l],
-                                 gains_ref[l], state)
-        oe, oo = _net_layer_detect(u, gains_ref[l])
-        zero = jnp.zeros_like(oe)
-        state = (oe, zero, oo, zero)
-    oe_ref[...] = state[0]
-    oo_ref[...] = state[2]
-
-
-def network_fwd_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
-                       gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
-                       oe_ref, oo_ref,
-                       sver_ref, svei_ref, svor_ref, svoi_ref,
-                       suer_ref, suei_ref, suor_ref, suoi_ref):
-    """VJP forward: identical sweep, plus every layer's two pre-gain stage
-    boundaries (post-V, post-U) into stacked [L, B, P] residuals."""
-    n_layers = coef_v_ref.shape[0]
-    state = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
-    for l in range(n_layers):
-        v, u = _net_layer_stages(coef_v_ref[l], par_v_ref[l],
-                                 coef_u_ref[l], par_u_ref[l],
-                                 gains_ref[l], state)
-        sver_ref[l], svei_ref[l], svor_ref[l], svoi_ref[l] = v
-        suer_ref[l], suei_ref[l], suor_ref[l], suoi_ref[l] = u
-        oe, oo = _net_layer_detect(u, gains_ref[l])
-        zero = jnp.zeros_like(oe)
-        state = (oe, zero, oo, zero)
-    oe_ref[...] = state[0]
-    oo_ref[...] = state[2]
-
-
-def _detect_bwd(u, g, goe, goo):
+def _detect_bwd_z(z, goe, goo):
     """|detect| backward: d|z|/dz = z/|z| (0 at the origin, which also
-    kills zero-padded batch rows).  Returns the cotangent of the post-g2
-    complex state ``z = g2 * u``."""
-    zer, zei = _cmul(u[0], u[1], g[8], g[9])
-    zor, zoi = _cmul(u[2], u[3], g[10], g[11])
+    kills zero-padded batch rows).  ``z`` is the combined post-g2 complex
+    state of a tile row; returns its cotangent."""
+    zer, zei, zor, zoi = z
     me = jnp.sqrt(zer * zer + zei * zei)
     mo = jnp.sqrt(zor * zor + zoi * zoi)
     inv_e = jnp.where(me > 0, goe / jnp.where(me > 0, me, 1.0), 0.0)
@@ -605,453 +800,364 @@ def _detect_bwd(u, g, goe, goo):
 
 
 def _layer_linear_bwd(cv_inv, cv_adj, par_v, cu_inv, cu_adj, par_u, g,
-                      x_in, v, u, gz, dcv_ref, dcu_ref, layer):
-    """Unwind the linear stages g2 -> U -> g1 -> V -> g0 of one layer/tile.
+                      x_in, v, u, gz):
+    """Unwind the linear stages g2 -> U -> g1 -> V -> g0 of one stacked
+    layer — every (To, Ti) tile at once.
 
-    ``gz`` is the cotangent of the post-g2 complex state (after |detect|
-    backward for the network kernel; the row-sum cotangent directly for
-    the tile-grid kernel, whose combine is linear).  ``x_in``/``v``/``u``
-    are the layer input and stage states; accumulates coefficient
-    gradients into slot ``layer`` (int or tuple) of the stacked
-    accumulators and returns ``(dgains [12, P], gx planes)``.
+    ``gz`` is the cotangent of the post-g2 complex state as [B, To, 1, P]
+    row planes broadcast to every tile (the row combine is a sum, so each
+    tile of a row sees its row's cotangent).  ``x_in``/``v``/``u`` are
+    the stacked layer input and stage states.  Returns the layer's
+    gradient slabs ``(dcv, dcu [To, Ti, C, 8, P], dg [To, Ti, 12, P])``
+    and the per-tile input cotangent planes [B, To, Ti, P] (NOT yet
+    summed over rows — the caller applies the combine's transpose).
     """
     gzer, gzei, gzor, gzoi = gz
-    dg2 = (_conj_dot(u[0], u[1], gzer, gzei)
-           + _conj_dot(u[2], u[3], gzor, gzoi))
+    dg2 = (_vconj_dot(u[0], u[1], gzer, gzei)
+           + _vconj_dot(u[2], u[3], gzor, gzoi))
     guer, guei = _cmul(g[8], -g[9], gzer, gzei)
     guor, guoi = _cmul(g[10], -g[11], gzor, gzoi)
 
-    _, gh = _run_columns_bwd(cu_inv, cu_adj, par_u, dcu_ref, u,
-                             (guer, guei, guor, guoi), layer=layer)
+    _, gh, dcu = _vrun_columns_bwd(cu_inv, cu_adj, par_u, u,
+                                   (guer, guei, guor, guoi))
 
-    dg1 = (_conj_dot(v[0], v[1], gh[0], gh[1])
-           + _conj_dot(v[2], v[3], gh[2], gh[3]))
+    dg1 = (_vconj_dot(v[0], v[1], gh[0], gh[1])
+           + _vconj_dot(v[2], v[3], gh[2], gh[3]))
     gver, gvei = _cmul(g[4], -g[5], gh[0], gh[1])
     gvor, gvoi = _cmul(g[6], -g[7], gh[2], gh[3])
 
-    _, gs0 = _run_columns_bwd(cv_inv, cv_adj, par_v, dcv_ref, v,
-                              (gver, gvei, gvor, gvoi), layer=layer)
+    _, gs0, dcv = _vrun_columns_bwd(cv_inv, cv_adj, par_v, v,
+                                    (gver, gvei, gvor, gvoi))
 
     # pre-gain g0: s0 = g0 * x_in
-    dg0 = (_conj_dot(x_in[0], x_in[1], gs0[0], gs0[1])
-           + _conj_dot(x_in[2], x_in[3], gs0[2], gs0[3]))
+    dg0 = (_vconj_dot(x_in[0], x_in[1], gs0[0], gs0[1])
+           + _vconj_dot(x_in[2], x_in[3], gs0[2], gs0[3]))
     gxer, gxei = _cmul(g[0], -g[1], gs0[0], gs0[1])
     gxor, gxoi = _cmul(g[2], -g[3], gs0[2], gs0[3])
 
-    dg = jnp.concatenate(list(dg0) + list(dg1) + list(dg2), axis=0)
-    return dg, (gxer, gxei, gxor, gxoi)
+    dg = jnp.stack(list(dg0) + list(dg1) + list(dg2), axis=-2)
+    return dcv, dcu, dg, (gxer, gxei, gxor, gxoi)
 
 
-def _net_layer_bwd(cv_inv, cv_adj, par_v, cu_inv, cu_adj, par_u, g,
-                   x_in, v, u, goe, goo, dcv_ref, dcu_ref, layer):
-    """Unwind one network layer: |detect| -> linear stages (see above)."""
-    gz = _detect_bwd(u, g, goe, goo)
-    return _layer_linear_bwd(cv_inv, cv_adj, par_v, cu_inv, cu_adj, par_u,
-                             g, x_in, v, u, gz, dcv_ref, dcu_ref, layer)
+def _layer_gain_planes(gains_ref, l):
+    """Layer ``l``'s 12 gain planes, [To, Ti, P] each."""
+    g = gains_ref[l]
+    return [g[:, :, k] for k in range(12)]
 
 
-def network_bwd_kernel(cv_inv_ref, cv_adj_ref, par_v_ref,
-                       cu_inv_ref, cu_adj_ref, par_u_ref, gains_ref,
-                       xer_ref, xei_ref, xor_ref, xoi_ref,
-                       sver_ref, svei_ref, svor_ref, svoi_ref,
-                       suer_ref, suei_ref, suor_ref, suoi_ref,
-                       goe_ref, goo_ref,
-                       dcv_ref, dcu_ref, dg_ref,
-                       dxer_ref, dxei_ref, dxor_ref, dxoi_ref):
-    """Unwind the whole network in one residency, layers in reverse.
+def _broadcast_tiles(planes, to):
+    """[B, Ti, P] input planes -> stacked [B, To, Ti, P] (every tile row
+    sweeps the whole input), batch-materialized for the fori carries."""
+    b, ti, p = planes[0].shape
+    return tuple(jnp.broadcast_to(t[:, None], (b, to, ti, p))
+                 for t in planes)
 
-    Each layer unwinds from its saved stage boundaries with the
-    inverse/adjoint sweeps (no forward recompute); its *input* activation
-    — needed only for the g0 gradient — is re-detected from the previous
-    layer's saved post-U state (one elementwise |g2 u|).  Crossing a
-    boundary keeps only the real cotangent planes — the imaginary planes
-    of an inter-layer input are structurally zero.
+
+def _deep_forward(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref, gains_ref,
+                  xer_ref, xei_ref, xor_ref, xoi_ref, stage_refs=None):
+    """All L layers of the (To x Ti) grid on one batch block, every
+    layer's To*Ti tiles swept together as stacked [B, To, Ti, P] planes.
+
+    Input planes are [B, Ti, P]; returns the *last* layer's combined
+    post-g2 row planes ([B, To, P] x 4 — the caller applies the
+    readout).  With ``stage_refs`` (the 8 ``[L, B, To, Ti, P]`` residual
+    refs of the VJP forward) every tile's two pre-gain stage boundaries
+    are saved as whole slabs; inference passes ``None``.
     """
+    n_layers, to = coef_v_ref.shape[0], coef_v_ref.shape[1]
+    state_in = _broadcast_tiles(
+        (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...]), to)
+    z_row = None
+    for l in range(n_layers):
+        if l > 0:
+            # in-VMEM re-detection: the previous layer's To combined rows
+            # become this layer's Ti real input tiles (To == Ti for L > 1)
+            oe, oo = _detect_z(z_row)
+            zero = jnp.zeros_like(oe)
+            state_in = _broadcast_tiles((oe, zero, oo, zero), to)
+        g = _layer_gain_planes(gains_ref, l)
+        v, u = _net_layer_stages(coef_v_ref[l], par_v_ref[l],
+                                 coef_u_ref[l], par_u_ref[l], g, state_in)
+        if stage_refs is not None:
+            (sver, svei, svor, svoi, suer, suei, suor, suoi) = stage_refs
+            sver[l], svei[l] = v[0], v[1]
+            svor[l], svoi[l] = v[2], v[3]
+            suer[l], suei[l] = u[0], u[1]
+            suor[l], suoi[l] = u[2], u[3]
+        z = _tile_z(u, g)
+        # matched-line row combine: sum each row's Ti tile outputs
+        z_row = tuple(t.sum(axis=2) for t in z)
+    return z_row
+
+
+def deepgrid_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref, gains_ref,
+                    xer_ref, xei_ref, xor_ref, xoi_ref, *out_refs,
+                    detect_last: bool):
+    """Inference megakernel: the whole deep tiled network, one residency.
+
+    ``detect_last`` (static) picks the readout: True writes the detected
+    row magnitudes (2 output planes), False the combined complex row
+    states (4 planes).
+    """
+    z = _deep_forward(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
+                      gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref)
+    if detect_last:
+        oe_ref, oo_ref = out_refs
+        oe, oo = _detect_z(z)
+        oe_ref[...], oo_ref[...] = oe, oo
+    else:
+        oer_ref, oei_ref, oor_ref, ooi_ref = out_refs
+        oer_ref[...], oei_ref[...] = z[0], z[1]
+        oor_ref[...], ooi_ref[...] = z[2], z[3]
+
+
+def deepgrid_fwd_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
+                        gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
+                        *out_refs, detect_last: bool):
+    """VJP forward: identical sweep, plus every tile's two pre-gain stage
+    boundaries (post-V, post-U) into [L, B, To, Ti, P] residual planes."""
+    n_out = 2 if detect_last else 4
+    stage_refs = out_refs[n_out:]
+    z = _deep_forward(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
+                      gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
+                      stage_refs=stage_refs)
+    if detect_last:
+        oe_ref, oo_ref = out_refs[:2]
+        oe, oo = _detect_z(z)
+        oe_ref[...], oo_ref[...] = oe, oo
+    else:
+        oer_ref, oei_ref, oor_ref, ooi_ref = out_refs[:4]
+        oer_ref[...], oei_ref[...] = z[0], z[1]
+        oor_ref[...], ooi_ref[...] = z[2], z[3]
+
+
+def deepgrid_bwd_kernel(cv_inv_ref, cv_adj_ref, par_v_ref,
+                        cu_inv_ref, cu_adj_ref, par_u_ref, gains_ref,
+                        xer_ref, xei_ref, xor_ref, xoi_ref,
+                        sver_ref, svei_ref, svor_ref, svoi_ref,
+                        suer_ref, suei_ref, suor_ref, suoi_ref,
+                        *cot_and_out_refs, detect_last: bool):
+    """Unwind the whole deep grid in one residency, layers in reverse.
+
+    Every tile unwinds g2 -> U -> g1 -> V -> g0 from its saved stage
+    boundaries with the inverse/adjoint sweeps, accumulating into its
+    (layer, row, tile) slot of the stacked coefficient/gain accumulators
+    (revisited across the batch grid).  The row combine is a sum, so all
+    Ti tiles of a row see the row's cotangent; the combine's transpose —
+    each input tile's cotangent summed over the To rows — runs in VMEM,
+    and crossing a layer boundary re-detects the previous layer's rows
+    from their saved post-U states and converts the (real) cotangent
+    through the |detect| backward.  Layer 0 writes the input cotangent
+    planes [B, Ti, P].
+    """
+    n_cot = 2 if detect_last else 4
+    cot_refs = cot_and_out_refs[:n_cot]
+    (dcv_ref, dcu_ref, dg_ref,
+     dxer_ref, dxei_ref, dxor_ref, dxoi_ref) = cot_and_out_refs[n_cot:]
+
     @pl.when(pl.program_id(0) == 0)
     def _init():
         dcv_ref[...] = jnp.zeros(dcv_ref.shape, dcv_ref.dtype)
         dcu_ref[...] = jnp.zeros(dcu_ref.shape, dcu_ref.dtype)
         dg_ref[...] = jnp.zeros(dg_ref.shape, dg_ref.dtype)
 
-    n_layers = cv_inv_ref.shape[0]
-    goe, goo = goe_ref[...], goo_ref[...]
+    n_layers, to = cv_inv_ref.shape[0], cv_inv_ref.shape[1]
+
+    def saved_v(l):
+        return (sver_ref[l], svei_ref[l], svor_ref[l], svoi_ref[l])
+
+    def saved_u(l):
+        return (suer_ref[l], suei_ref[l], suor_ref[l], suoi_ref[l])
+
+    def row_z(l):
+        """Recompute layer l's combined post-g2 row planes [B, To, P]
+        from the saved post-U stages (elementwise — no sweep)."""
+        z = _tile_z(saved_u(l), _layer_gain_planes(gains_ref, l))
+        return tuple(t.sum(axis=2) for t in z)
+
+    if detect_last:
+        goe_ref, goo_ref = cot_refs
+        gz = _detect_bwd_z(row_z(n_layers - 1), goe_ref[...], goo_ref[...])
+    else:
+        gz = tuple(r[...] for r in cot_refs)              # [B, To, P]
+
     for l in range(n_layers - 1, -1, -1):
         if l == 0:
-            x_in = (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...])
+            z_prev = None
+            state_in = _broadcast_tiles(
+                (xer_ref[...], xei_ref[...], xor_ref[...], xoi_ref[...]),
+                to)
         else:
-            u_prev = (suer_ref[l - 1], suei_ref[l - 1],
-                      suor_ref[l - 1], suoi_ref[l - 1])
-            be, bo = _net_layer_detect(u_prev, gains_ref[l - 1])
+            # layer l's input tiles: re-detected previous-layer rows
+            # (To == Ti whenever L > 1, so indices line up)
+            z_prev = row_z(l - 1)
+            be, bo = _detect_z(z_prev)
             zero = jnp.zeros_like(be)
-            x_in = (be, zero, bo, zero)
-        g = gains_ref[l]
-        v = (sver_ref[l], svei_ref[l], svor_ref[l], svoi_ref[l])
-        u = (suer_ref[l], suei_ref[l], suor_ref[l], suoi_ref[l])
-        dg, gx = _net_layer_bwd(
+            state_in = _broadcast_tiles((be, zero, bo, zero), to)
+        # the row combine is a sum: every tile of a row sees the row's
+        # cotangent ([B, To, 1, P] broadcast across the stacked sweep)
+        gz_t = tuple(t[:, :, None] for t in gz)
+        dcv, dcu, dg, gx = _layer_linear_bwd(
             cv_inv_ref[l], cv_adj_ref[l], par_v_ref[l],
             cu_inv_ref[l], cu_adj_ref[l], par_u_ref[l],
-            g, x_in, v, u, goe, goo, dcv_ref, dcu_ref, l)
+            _layer_gain_planes(gains_ref, l),
+            state_in, saved_v(l), saved_u(l), gz_t)
+        dcv_ref[l] = dcv_ref[l] + dcv
+        dcu_ref[l] = dcu_ref[l] + dcu
         dg_ref[l] = dg_ref[l] + dg
+        # combine's transpose: each input tile sums its cotangent over
+        # the To rows
+        dx = tuple(t.sum(axis=1) for t in gx)             # [B, Ti, P]
         if l > 0:
-            goe, goo = gx[0], gx[2]
+            # boundary crossing keeps only the real cotangent planes (the
+            # imaginary planes of an inter-layer input are structurally
+            # zero) and converts through the |detect| backward
+            gz = _detect_bwd_z(z_prev, dx[0], dx[2])
         else:
-            dxer_ref[...] = gx[0]
-            dxei_ref[...] = gx[1]
-            dxor_ref[...] = gx[2]
-            dxoi_ref[...] = gx[3]
+            dxer_ref[...], dxei_ref[...] = dx[0], dx[1]
+            dxor_ref[...], dxoi_ref[...] = dx[2], dx[3]
 
 
-def _net_coef_spec(n_layers: int, n_cols: int, p: int):
-    return pl.BlockSpec((n_layers, n_cols, 8, p), lambda i: (0, 0, 0, 0))
+def _deep_coef_spec(n_layers: int, to: int, ti: int, n_cols: int, p: int):
+    return pl.BlockSpec((n_layers, to, ti, n_cols, 8, p),
+                        lambda b: (0, 0, 0, 0, 0, 0))
 
 
-def _net_parity_spec(n_layers: int, n_cols: int):
-    return pl.BlockSpec((n_layers, n_cols, 1), lambda i: (0, 0, 0))
+def _deep_parity_spec(n_layers: int, to: int, ti: int, n_cols: int):
+    return pl.BlockSpec((n_layers, to, ti, n_cols, 1),
+                        lambda b: (0, 0, 0, 0, 0))
 
 
-def _net_gains_spec(n_layers: int, p: int):
-    return pl.BlockSpec((n_layers, 12, p), lambda i: (0, 0, 0))
+def _deep_gains_spec(n_layers: int, to: int, ti: int, p: int):
+    return pl.BlockSpec((n_layers, to, ti, 12, p),
+                        lambda b: (0, 0, 0, 0, 0))
 
 
-def _net_flops_per_block(n: int, n_layers: int, n_cols: int,
-                         batch_block: int) -> int:
+def _deep_flops_per_block(n: int, n_layers: int, to: int, ti: int,
+                          n_cols: int, batch_block: int) -> int:
     p = n // 2
-    return 2 * n_layers * (2 * n_cols * p * 16 + 9 * n) * batch_block
+    return 2 * n_layers * to * ti * (2 * n_cols * p * 16 + 9 * n) \
+        * batch_block
 
 
-def network_pallas_call(n: int, n_layers: int, n_cols: int, batch_block: int,
-                        n_batch_blocks: int, interpret: bool):
+def _deep_coef_bytes(n_layers: int, to: int, ti: int, n_cols: int,
+                     p: int) -> int:
+    return n_layers * to * ti * (n_cols * 8 + 12) * p * 4
+
+
+def deepgrid_pallas_call(n: int, n_layers: int, to: int, ti: int,
+                         n_cols: int, batch_block: int, n_batch_blocks: int,
+                         detect_last: bool, interpret: bool):
     p = n // 2
-    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
-    out_shape = [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
-                                      jnp.float32)] * 2
-    flops = _net_flops_per_block(n, n_layers, n_cols, batch_block)
+    b_total = n_batch_blocks * batch_block
+    x_plane = pl.BlockSpec((batch_block, ti, p), lambda b: (b, 0, 0))
+    o_plane = pl.BlockSpec((batch_block, to, p), lambda b: (b, 0, 0))
+    n_out = 2 if detect_last else 4
+    out_shape = [jax.ShapeDtypeStruct((b_total, to, p), jnp.float32)] * n_out
+    flops = _deep_flops_per_block(n, n_layers, to, ti, n_cols, batch_block)
     return pl.pallas_call(
-        network_kernel,
+        functools.partial(deepgrid_kernel, detect_last=detect_last),
         grid=(n_batch_blocks,),
-        in_specs=[_net_coef_spec(n_layers, n_cols, p),
-                  _net_parity_spec(n_layers, n_cols),
-                  _net_coef_spec(n_layers, n_cols, p),
-                  _net_parity_spec(n_layers, n_cols),
-                  _net_gains_spec(n_layers, p),
-                  plane, plane, plane, plane],
-        out_specs=[plane] * 2,
+        in_specs=[_deep_coef_spec(n_layers, to, ti, n_cols, p),
+                  _deep_parity_spec(n_layers, to, ti, n_cols),
+                  _deep_coef_spec(n_layers, to, ti, n_cols, p),
+                  _deep_parity_spec(n_layers, to, ti, n_cols),
+                  _deep_gains_spec(n_layers, to, ti, p),
+                  x_plane, x_plane, x_plane, x_plane],
+        out_specs=[o_plane] * n_out,
         out_shape=out_shape,
         interpret=interpret,
         cost_estimate=pl.CostEstimate(
             flops=flops * n_batch_blocks,
-            bytes_accessed=(6 * batch_block * p * 4
-                            + 2 * n_layers * n_cols * 8 * p * 4
-                            + n_layers * 12 * p * 4) * n_batch_blocks,
-            transcendentals=n_layers * batch_block * p * 2 * n_batch_blocks,
+            bytes_accessed=((4 * ti + n_out * to) * batch_block * p * 4
+                            + _deep_coef_bytes(n_layers, to, ti, n_cols, p))
+            * n_batch_blocks,
+            transcendentals=n_layers * to * batch_block * p * 2
+            * n_batch_blocks,
         ),
     )
 
 
-def network_fwd_pallas_call(n: int, n_layers: int, n_cols: int,
-                            batch_block: int, n_batch_blocks: int,
-                            interpret: bool):
+def deepgrid_fwd_pallas_call(n: int, n_layers: int, to: int, ti: int,
+                             n_cols: int, batch_block: int,
+                             n_batch_blocks: int, detect_last: bool,
+                             interpret: bool):
     p = n // 2
-    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
-    stage = pl.BlockSpec((n_layers, batch_block, p), lambda i: (0, i, 0))
     b_total = n_batch_blocks * batch_block
+    x_plane = pl.BlockSpec((batch_block, ti, p), lambda b: (b, 0, 0))
+    o_plane = pl.BlockSpec((batch_block, to, p), lambda b: (b, 0, 0))
+    stage = pl.BlockSpec((n_layers, batch_block, to, ti, p),
+                         lambda b: (0, b, 0, 0, 0))
+    n_out = 2 if detect_last else 4
     out_shape = (
-        [jax.ShapeDtypeStruct((b_total, p), jnp.float32)] * 2
-        + [jax.ShapeDtypeStruct((n_layers, b_total, p), jnp.float32)] * 8)
-    flops = _net_flops_per_block(n, n_layers, n_cols, batch_block)
+        [jax.ShapeDtypeStruct((b_total, to, p), jnp.float32)] * n_out
+        + [jax.ShapeDtypeStruct((n_layers, b_total, to, ti, p),
+                                jnp.float32)] * 8)
+    flops = _deep_flops_per_block(n, n_layers, to, ti, n_cols, batch_block)
     return pl.pallas_call(
-        network_fwd_kernel,
+        functools.partial(deepgrid_fwd_kernel, detect_last=detect_last),
         grid=(n_batch_blocks,),
-        in_specs=[_net_coef_spec(n_layers, n_cols, p),
-                  _net_parity_spec(n_layers, n_cols),
-                  _net_coef_spec(n_layers, n_cols, p),
-                  _net_parity_spec(n_layers, n_cols),
-                  _net_gains_spec(n_layers, p),
-                  plane, plane, plane, plane],
-        out_specs=[plane, plane] + [stage] * 8,
+        in_specs=[_deep_coef_spec(n_layers, to, ti, n_cols, p),
+                  _deep_parity_spec(n_layers, to, ti, n_cols),
+                  _deep_coef_spec(n_layers, to, ti, n_cols, p),
+                  _deep_parity_spec(n_layers, to, ti, n_cols),
+                  _deep_gains_spec(n_layers, to, ti, p),
+                  x_plane, x_plane, x_plane, x_plane],
+        out_specs=[o_plane] * n_out + [stage] * 8,
         out_shape=out_shape,
         interpret=interpret,
         cost_estimate=pl.CostEstimate(
             flops=flops * n_batch_blocks,
-            bytes_accessed=((6 + 8 * n_layers) * batch_block * p * 4
-                            + 2 * n_layers * n_cols * 8 * p * 4
-                            + n_layers * 12 * p * 4) * n_batch_blocks,
-            transcendentals=n_layers * batch_block * p * 2 * n_batch_blocks,
+            bytes_accessed=(((4 + 8 * n_layers * to) * ti + n_out * to)
+                            * batch_block * p * 4
+                            + _deep_coef_bytes(n_layers, to, ti, n_cols, p))
+            * n_batch_blocks,
+            transcendentals=n_layers * to * batch_block * p * 2
+            * n_batch_blocks,
         ),
     )
 
 
-# ---------------------------------------------------------------------------
-# Tile-grid megakernel: a (To x Ti) grid of analog tiles in one pallas_call
-# ---------------------------------------------------------------------------
-#
-# A large (To*n) x (Ti*n) matmul as block sums over tile processors: input
-# tile i sweeps through tile (r, i)'s meshes (g0 -> V -> g1 -> U -> g2, the
-# same 12-row gain layout as one network layer, no |detect| — the combine
-# is coherent) and the Ti complex outputs of tile row r are summed in VMEM
-# (matched-line power combiner).  The readout mode (|.|, Re, complex) and
-# detector noise apply *after* combination, outside the kernel.
-#
-# Grid is (To, batch blocks) — batch innermost: one grid step computes one
-# (tile row, batch block) output panel, so a row's coefficient-gradient
-# accumulators are revisited on *consecutive* steps (the same property the
-# 1-D batch grid gives the other kernels).  Planes are [B, Ti, P] in /
-# [B, To, P] out; coefficients/parities/gains stack to [To, Ti, C, 8, P] /
-# [To, Ti, C, 1] / [To, Ti, 12, P] with identity-column padding to the
-# grid-wide C (see ``repro.kernels.schedule.TileGridSchedule``).
-#
-# Residuals follow the per-tile rule: each tile saves its two pre-gain
-# stage boundaries (post-V, post-U) into [To, Ti, B, P] planes — exactly
-# the 8 planes per tile the per-tile composition would have stored — and
-# the backward unwinds every tile from them with the inverse/adjoint
-# sweeps.  The input cotangent is emitted as per-row partials
-# [To, B, Ti, P] (each written once per grid step) and summed outside the
-# kernel: dx_i = sum_r gx_{r,i}, the transpose of the row combine.
-
-
-def _tile_row_fwd(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref, gains_ref,
-                  xer_ref, xei_ref, xor_ref, xoi_ref):
-    """One tile row: sweep every input tile, combine coherently.
-
-    Returns the combined post-g2 planes plus the per-tile (v, u) stage
-    states (the VJP forward's residuals; inference discards them).
-    """
-    n_in = coef_v_ref.shape[1]
-    acc = None
-    stages = []
-    for i in range(n_in):
-        state = (xer_ref[:, i], xei_ref[:, i], xor_ref[:, i], xoi_ref[:, i])
-        g = gains_ref[0, i]
-        v, u = _net_layer_stages(coef_v_ref[0, i], par_v_ref[0, i],
-                                 coef_u_ref[0, i], par_u_ref[0, i], g, state)
-        stages.append((v, u))
-        zer, zei = _cmul(u[0], u[1], g[8], g[9])
-        zor, zoi = _cmul(u[2], u[3], g[10], g[11])
-        z = (zer, zei, zor, zoi)
-        acc = z if acc is None else tuple(a + b for a, b in zip(acc, z))
-    return acc, stages
-
-
-def tilegrid_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref, gains_ref,
-                    xer_ref, xei_ref, xor_ref, xoi_ref,
-                    oer_ref, oei_ref, oor_ref, ooi_ref):
-    """Inference: one (tile row, batch block) combined output per step."""
-    acc, _ = _tile_row_fwd(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
-                           gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref)
-    oer_ref[:, 0], oei_ref[:, 0] = acc[0], acc[1]
-    oor_ref[:, 0], ooi_ref[:, 0] = acc[2], acc[3]
-
-
-def tilegrid_fwd_kernel(coef_v_ref, par_v_ref, coef_u_ref, par_u_ref,
-                        gains_ref, xer_ref, xei_ref, xor_ref, xoi_ref,
-                        oer_ref, oei_ref, oor_ref, ooi_ref,
-                        sver_ref, svei_ref, svor_ref, svoi_ref,
-                        suer_ref, suei_ref, suor_ref, suoi_ref):
-    """VJP forward: identical sweep, plus every tile's two pre-gain stage
-    boundaries (post-V, post-U) into [To, Ti, B, P] residual planes."""
-    acc, stages = _tile_row_fwd(coef_v_ref, par_v_ref, coef_u_ref,
-                                par_u_ref, gains_ref,
-                                xer_ref, xei_ref, xor_ref, xoi_ref)
-    for i, (v, u) in enumerate(stages):
-        sver_ref[0, i], svei_ref[0, i] = v[0], v[1]
-        svor_ref[0, i], svoi_ref[0, i] = v[2], v[3]
-        suer_ref[0, i], suei_ref[0, i] = u[0], u[1]
-        suor_ref[0, i], suoi_ref[0, i] = u[2], u[3]
-    oer_ref[:, 0], oei_ref[:, 0] = acc[0], acc[1]
-    oor_ref[:, 0], ooi_ref[:, 0] = acc[2], acc[3]
-
-
-def tilegrid_bwd_kernel(cv_inv_ref, cv_adj_ref, par_v_ref,
-                        cu_inv_ref, cu_adj_ref, par_u_ref, gains_ref,
-                        xer_ref, xei_ref, xor_ref, xoi_ref,
-                        sver_ref, svei_ref, svor_ref, svoi_ref,
-                        suer_ref, suei_ref, suor_ref, suoi_ref,
-                        goer_ref, goei_ref, goor_ref, gooi_ref,
-                        dcv_ref, dcu_ref, dg_ref,
-                        dxer_ref, dxei_ref, dxor_ref, dxoi_ref):
-    """Unwind one tile row from the saved stage boundaries.
-
-    The row combine is a sum, so every tile of the row sees the same
-    output cotangent; each tile unwinds g2 -> U -> g1 -> V -> g0 with the
-    inverse/adjoint sweeps, accumulating into its (row, tile) slot of the
-    stacked coefficient/gain accumulators (revisited across the inner
-    batch grid).  Input cotangents land in the per-row partial planes.
-    """
-    @pl.when(pl.program_id(1) == 0)
-    def _init():
-        dcv_ref[...] = jnp.zeros(dcv_ref.shape, dcv_ref.dtype)
-        dcu_ref[...] = jnp.zeros(dcu_ref.shape, dcu_ref.dtype)
-        dg_ref[...] = jnp.zeros(dg_ref.shape, dg_ref.dtype)
-
-    gz = (goer_ref[:, 0], goei_ref[:, 0], goor_ref[:, 0], gooi_ref[:, 0])
-    n_in = cv_inv_ref.shape[1]
-    for i in range(n_in):
-        g = gains_ref[0, i]
-        x_in = (xer_ref[:, i], xei_ref[:, i], xor_ref[:, i], xoi_ref[:, i])
-        v = (sver_ref[0, i], svei_ref[0, i], svor_ref[0, i], svoi_ref[0, i])
-        u = (suer_ref[0, i], suei_ref[0, i], suor_ref[0, i], suoi_ref[0, i])
-        dg, gx = _layer_linear_bwd(
-            cv_inv_ref[0, i], cv_adj_ref[0, i], par_v_ref[0, i],
-            cu_inv_ref[0, i], cu_adj_ref[0, i], par_u_ref[0, i],
-            g, x_in, v, u, gz, dcv_ref, dcu_ref, (0, i))
-        dg_ref[0, i] = dg_ref[0, i] + dg
-        dxer_ref[0, :, i], dxei_ref[0, :, i] = gx[0], gx[1]
-        dxor_ref[0, :, i], dxoi_ref[0, :, i] = gx[2], gx[3]
-
-
-def _grid_coef_spec(ti: int, n_cols: int, p: int):
-    return pl.BlockSpec((1, ti, n_cols, 8, p), lambda r, b: (r, 0, 0, 0, 0))
-
-
-def _grid_parity_spec(ti: int, n_cols: int):
-    return pl.BlockSpec((1, ti, n_cols, 1), lambda r, b: (r, 0, 0, 0))
-
-
-def _grid_gains_spec(ti: int, p: int):
-    return pl.BlockSpec((1, ti, 12, p), lambda r, b: (r, 0, 0, 0))
-
-
-def _grid_flops_per_block(n: int, ti: int, n_cols: int,
-                          batch_block: int) -> int:
-    p = n // 2
-    return 2 * ti * (2 * n_cols * p * 16 + 9 * n) * batch_block
-
-
-def tilegrid_pallas_call(n: int, to: int, ti: int, n_cols: int,
-                         batch_block: int, n_batch_blocks: int,
-                         interpret: bool):
-    p = n // 2
-    b_total = n_batch_blocks * batch_block
-    x_plane = pl.BlockSpec((batch_block, ti, p), lambda r, b: (b, 0, 0))
-    o_plane = pl.BlockSpec((batch_block, 1, p), lambda r, b: (b, r, 0))
-    out_shape = [jax.ShapeDtypeStruct((b_total, to, p), jnp.float32)] * 4
-    flops = _grid_flops_per_block(n, ti, n_cols, batch_block)
-    return pl.pallas_call(
-        tilegrid_kernel,
-        grid=(to, n_batch_blocks),
-        in_specs=[_grid_coef_spec(ti, n_cols, p),
-                  _grid_parity_spec(ti, n_cols),
-                  _grid_coef_spec(ti, n_cols, p),
-                  _grid_parity_spec(ti, n_cols),
-                  _grid_gains_spec(ti, p),
-                  x_plane, x_plane, x_plane, x_plane],
-        out_specs=[o_plane] * 4,
-        out_shape=out_shape,
-        interpret=interpret,
-        cost_estimate=pl.CostEstimate(
-            flops=flops * to * n_batch_blocks,
-            bytes_accessed=((4 * ti + 4) * batch_block * p * 4
-                            + 2 * ti * n_cols * 8 * p * 4
-                            + ti * 12 * p * 4) * to * n_batch_blocks,
-            transcendentals=0,
-        ),
-    )
-
-
-def tilegrid_fwd_pallas_call(n: int, to: int, ti: int, n_cols: int,
-                             batch_block: int, n_batch_blocks: int,
+def deepgrid_bwd_pallas_call(n: int, n_layers: int, to: int, ti: int,
+                             n_cols: int, batch_block: int,
+                             n_batch_blocks: int, detect_last: bool,
                              interpret: bool):
     p = n // 2
     b_total = n_batch_blocks * batch_block
-    x_plane = pl.BlockSpec((batch_block, ti, p), lambda r, b: (b, 0, 0))
-    o_plane = pl.BlockSpec((batch_block, 1, p), lambda r, b: (b, r, 0))
-    stage = pl.BlockSpec((1, ti, batch_block, p), lambda r, b: (r, 0, b, 0))
+    x_plane = pl.BlockSpec((batch_block, ti, p), lambda b: (b, 0, 0))
+    o_plane = pl.BlockSpec((batch_block, to, p), lambda b: (b, 0, 0))
+    stage = pl.BlockSpec((n_layers, batch_block, to, ti, p),
+                         lambda b: (0, b, 0, 0, 0))
+    n_cot = 2 if detect_last else 4
     out_shape = (
-        [jax.ShapeDtypeStruct((b_total, to, p), jnp.float32)] * 4
-        + [jax.ShapeDtypeStruct((to, ti, b_total, p), jnp.float32)] * 8)
-    flops = _grid_flops_per_block(n, ti, n_cols, batch_block)
-    return pl.pallas_call(
-        tilegrid_fwd_kernel,
-        grid=(to, n_batch_blocks),
-        in_specs=[_grid_coef_spec(ti, n_cols, p),
-                  _grid_parity_spec(ti, n_cols),
-                  _grid_coef_spec(ti, n_cols, p),
-                  _grid_parity_spec(ti, n_cols),
-                  _grid_gains_spec(ti, p),
-                  x_plane, x_plane, x_plane, x_plane],
-        out_specs=[o_plane] * 4 + [stage] * 8,
-        out_shape=out_shape,
-        interpret=interpret,
-        cost_estimate=pl.CostEstimate(
-            flops=flops * to * n_batch_blocks,
-            bytes_accessed=((12 * ti + 4) * batch_block * p * 4
-                            + 2 * ti * n_cols * 8 * p * 4
-                            + ti * 12 * p * 4) * to * n_batch_blocks,
-            transcendentals=0,
-        ),
-    )
-
-
-def tilegrid_bwd_pallas_call(n: int, to: int, ti: int, n_cols: int,
-                             batch_block: int, n_batch_blocks: int,
-                             interpret: bool):
-    p = n // 2
-    b_total = n_batch_blocks * batch_block
-    x_plane = pl.BlockSpec((batch_block, ti, p), lambda r, b: (b, 0, 0))
-    o_plane = pl.BlockSpec((batch_block, 1, p), lambda r, b: (b, r, 0))
-    stage = pl.BlockSpec((1, ti, batch_block, p), lambda r, b: (r, 0, b, 0))
-    dx_part = pl.BlockSpec((1, batch_block, ti, p), lambda r, b: (r, b, 0, 0))
-    out_shape = (
-        [jax.ShapeDtypeStruct((to, ti, n_cols, 8, p), jnp.float32)] * 2
-        + [jax.ShapeDtypeStruct((to, ti, 12, p), jnp.float32)]
-        + [jax.ShapeDtypeStruct((to, b_total, ti, p), jnp.float32)] * 4)
+        [jax.ShapeDtypeStruct((n_layers, to, ti, n_cols, 8, p),
+                              jnp.float32)] * 2
+        + [jax.ShapeDtypeStruct((n_layers, to, ti, 12, p), jnp.float32)]
+        + [jax.ShapeDtypeStruct((b_total, ti, p), jnp.float32)] * 4)
     # inverse state recompute + adjoint cotangent + coefficient grads
-    flops = 3 * _grid_flops_per_block(n, ti, n_cols, batch_block)
+    flops = 3 * _deep_flops_per_block(n, n_layers, to, ti, n_cols,
+                                      batch_block)
     return pl.pallas_call(
-        tilegrid_bwd_kernel,
-        grid=(to, n_batch_blocks),
-        in_specs=[_grid_coef_spec(ti, n_cols, p)] * 2
-        + [_grid_parity_spec(ti, n_cols)]
-        + [_grid_coef_spec(ti, n_cols, p)] * 2
-        + [_grid_parity_spec(ti, n_cols), _grid_gains_spec(ti, p),
+        functools.partial(deepgrid_bwd_kernel, detect_last=detect_last),
+        grid=(n_batch_blocks,),
+        in_specs=[_deep_coef_spec(n_layers, to, ti, n_cols, p)] * 2
+        + [_deep_parity_spec(n_layers, to, ti, n_cols)]
+        + [_deep_coef_spec(n_layers, to, ti, n_cols, p)] * 2
+        + [_deep_parity_spec(n_layers, to, ti, n_cols),
+           _deep_gains_spec(n_layers, to, ti, p),
            x_plane, x_plane, x_plane, x_plane]
-        + [stage] * 8 + [o_plane] * 4,
-        out_specs=[_grid_coef_spec(ti, n_cols, p)] * 2
-        + [_grid_gains_spec(ti, p)] + [dx_part] * 4,
-        out_shape=out_shape,
-        interpret=interpret,
-        cost_estimate=pl.CostEstimate(
-            flops=flops * to * n_batch_blocks,
-            bytes_accessed=((16 * ti + 4) * batch_block * p * 4
-                            + 6 * ti * n_cols * 8 * p * 4
-                            + 2 * ti * 12 * p * 4) * to * n_batch_blocks,
-            transcendentals=0,
-        ),
-    )
-
-
-def network_bwd_pallas_call(n: int, n_layers: int, n_cols: int,
-                            batch_block: int, n_batch_blocks: int,
-                            interpret: bool):
-    p = n // 2
-    plane = pl.BlockSpec((batch_block, p), lambda i: (i, 0))
-    stage = pl.BlockSpec((n_layers, batch_block, p), lambda i: (0, i, 0))
-    out_shape = (
-        [jax.ShapeDtypeStruct((n_layers, n_cols, 8, p), jnp.float32)] * 2
-        + [jax.ShapeDtypeStruct((n_layers, 12, p), jnp.float32)]
-        + [jax.ShapeDtypeStruct((n_batch_blocks * batch_block, p),
-                                jnp.float32)] * 4)
-    # inverse state recompute + adjoint cotangent + coefficient grads
-    flops = 3 * _net_flops_per_block(n, n_layers, n_cols, batch_block)
-    return pl.pallas_call(
-        network_bwd_kernel,
-        grid=(n_batch_blocks,),
-        in_specs=[_net_coef_spec(n_layers, n_cols, p)] * 2
-        + [_net_parity_spec(n_layers, n_cols)]
-        + [_net_coef_spec(n_layers, n_cols, p)] * 2
-        + [_net_parity_spec(n_layers, n_cols),
-           _net_gains_spec(n_layers, p),
-           plane, plane, plane, plane]
-        + [stage] * 8 + [plane, plane],
-        out_specs=[_net_coef_spec(n_layers, n_cols, p)] * 2
-        + [_net_gains_spec(n_layers, p)] + [plane] * 4,
+        + [stage] * 8 + [o_plane] * n_cot,
+        out_specs=[_deep_coef_spec(n_layers, to, ti, n_cols, p)] * 2
+        + [_deep_gains_spec(n_layers, to, ti, p)] + [x_plane] * 4,
         out_shape=out_shape,
         interpret=interpret,
         cost_estimate=pl.CostEstimate(
             flops=flops * n_batch_blocks,
-            bytes_accessed=((10 + 8 * n_layers) * batch_block * p * 4
-                            + 6 * n_layers * n_cols * 8 * p * 4
-                            + 2 * n_layers * 12 * p * 4) * n_batch_blocks,
-            transcendentals=n_layers * batch_block * p * 2 * n_batch_blocks,
+            bytes_accessed=(((8 + 8 * n_layers * to) * ti + n_cot * to)
+                            * batch_block * p * 4
+                            + 3 * _deep_coef_bytes(n_layers, to, ti, n_cols,
+                                                   p)) * n_batch_blocks,
+            transcendentals=3 * n_layers * to * batch_block * p * 2
+            * n_batch_blocks,
         ),
     )

@@ -34,14 +34,12 @@ from repro.kernels import givens_mesh, ref
 from repro.kernels.schedule import (
     MeshSchedule,
     clements_schedule,
-    network_parity_arrays,
-    network_schedule,
+    deep_grid_parity_arrays,
+    deep_grid_schedule,
     pack_cells,
     pad_columns,
     parity_array,
     schedule_from_plan,
-    tile_grid_parity_arrays,
-    tile_grid_schedule,
 )
 
 Array = jax.Array
@@ -52,18 +50,21 @@ Array = jax.Array
 #: public-wrapper call (trace time under an outer jit).
 KERNEL_PATH_CALLS = {"mesh_apply": 0, "rfnn_linear": 0, "mesh_apply_cells": 0,
                      "rfnn_network": 0, "tiled_apply": 0,
-                     "tiled_apply_sharded": 0}
+                     "tiled_apply_sharded": 0, "deep_apply": 0,
+                     "deep_apply_sharded": 0}
 
 #: Instrumentation: number of times each jitted impl was actually *traced*.
 #: Regression tests use this to pin the schedule/trace-cache memoization —
 #: structurally equal plans must not re-trigger traces.
 TRACE_COUNTS = {"mesh_apply": 0, "rfnn_linear": 0, "rfnn_network": 0,
-                "tiled_apply": 0, "tiled_apply_sharded": 0}
+                "tiled_apply": 0, "tiled_apply_sharded": 0, "deep_apply": 0,
+                "deep_apply_sharded": 0}
 
 #: Instrumentation: number of coefficient-pack builds actually executed by
-#: :func:`rfnn_network` (cache misses / tracer bypasses).  Steady-state
-#: serving must not tick this.
-PACK_EVENTS = {"rfnn_network": 0, "tiled_apply": 0}
+#: :func:`pack_deep_grid` (cache misses / tracer bypasses), keyed by the
+#: entry point that requested the pack.  Steady-state serving must not
+#: tick this.
+PACK_EVENTS = {"rfnn_network": 0, "tiled_apply": 0, "deep_apply": 0}
 
 
 def _default_interpret() -> bool:
@@ -71,8 +72,23 @@ def _default_interpret() -> bool:
 
 
 def _auto_block(b: int, block_b: int) -> int:
-    """Shrink the batch block for small batches (never grow past block_b)."""
-    return max(1, min(block_b, -(-b // 8) * 8))
+    """Shrink ``block_b`` to divide the batch evenly (never grow past it).
+
+    ``block_b`` is a working-set ceiling, not a quantum: padding the
+    batch up to a multiple of the raw ceiling can waste most of the last
+    block (e.g. 256 rows in 232-row blocks -> 464 padded rows).
+    Spreading the same rows over ``ceil(b / block_b)`` equal blocks keeps
+    every block under the ceiling with at most 7 pad rows per block."""
+    if b <= 0:
+        return 1
+    block_b = max(1, block_b)
+    if b <= block_b + block_b // 8:
+        # anti-fragmentation: a single block may overshoot the ceiling by
+        # <= 1/8 (the target itself sits well under the physical budget)
+        return max(1, -(-b // 8) * 8)
+    n_blocks = -(-b // block_b)
+    even = -(-b // n_blocks)                       # ceil(b / n_blocks)
+    return max(1, min(block_b, -(-even // 8) * 8))
 
 
 def _pad_batch(x2d: Array, block: int) -> tuple[Array, int]:
@@ -338,47 +354,17 @@ def rfnn_linear(v_params: dict, atten: Array, u_params: dict, x: Array, *,
 
 
 # ---------------------------------------------------------------------------
-# Network megakernel: the whole L-layer RFNN in one fused sweep
+# Deep tiled-network megakernel: L layers x (To x Ti) tiles, one pallas_call
+# per direction
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def _network_planes(net, block_b, nb, interpret, coef_v, coef_u, gains,
-                    xer, xei, xor, xoi):
-    call = givens_mesh.network_pallas_call(
-        net.n, net.n_layers, net.n_columns, block_b, nb, interpret)
-    pv, pu = network_parity_arrays(net)
-    return tuple(call(coef_v, pv, coef_u, pu, gains, xer, xei, xor, xoi))
-
-
-def _network_planes_fwd(net, block_b, nb, interpret, coef_v, coef_u, gains,
-                        xer, xei, xor, xoi):
-    call = givens_mesh.network_fwd_pallas_call(
-        net.n, net.n_layers, net.n_columns, block_b, nb, interpret)
-    pv, pu = network_parity_arrays(net)
-    oe, oo, *stages = call(coef_v, pv, coef_u, pu, gains,
-                           xer, xei, xor, xoi)
-    # residuals: coefficients/gains + the network input + every layer's
-    # two pre-gain stage boundaries — everything inside a mesh is
-    # recomputed by the reversed inverse sweep
-    return (oe, oo), (coef_v, coef_u, gains, (xer, xei, xor, xoi),
-                      tuple(stages))
-
-
-def _network_planes_bwd(net, block_b, nb, interpret, res, cot):
-    coef_v, coef_u, gains, xplanes, stages = res
-    call = givens_mesh.network_bwd_pallas_call(
-        net.n, net.n_layers, net.n_columns, block_b, nb, interpret)
-    pv, pu = network_parity_arrays(net)
-    dcv, dcu, dg, dxer, dxei, dxor, dxoi = call(
-        givens_mesh.inverse_coefficients(coef_v),
-        givens_mesh.adjoint_coefficients(coef_v), pv,
-        givens_mesh.inverse_coefficients(coef_u),
-        givens_mesh.adjoint_coefficients(coef_u), pu,
-        gains, *xplanes, *stages, *cot)
-    return dcv, dcu, dg, dxer, dxei, dxor, dxoi
-
-
-_network_planes.defvjp(_network_planes_fwd, _network_planes_bwd)
+#
+# Everything deeper than a single mesh pair routes through here.  An
+# L-layer single-mesh RFNN is the To=Ti=1 degenerate case
+# (``rfnn_network``); a one-layer (To x Ti) tile grid is the L=1 case
+# (``tiled_apply``); the general case is a whole deep tiled network —
+# e.g. the paper's 4-layer 64x64 MNIST scale-up — in ONE kernel launch
+# per direction, with the inter-layer re-detection done in VMEM (zero
+# inter-layer HBM traffic).
 
 
 def _layer_gains(n: int, la: dict) -> Array:
@@ -403,57 +389,81 @@ def _layer_gains(n: int, la: dict) -> Array:
     return jnp.stack(rows).astype(jnp.float32)  # [12, P]
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _deepgrid_planes(deep, block_b, nb, interpret, detect_last,
+                     coef_v, coef_u, gains, xer, xei, xor, xoi):
+    call = givens_mesh.deepgrid_pallas_call(
+        deep.n, deep.n_layers, deep.to, deep.ti, deep.n_columns,
+        block_b, nb, detect_last, interpret)
+    pv, pu = deep_grid_parity_arrays(deep)
+    return tuple(call(coef_v, pv, coef_u, pu, gains, xer, xei, xor, xoi))
+
+
+def _deepgrid_planes_fwd(deep, block_b, nb, interpret, detect_last,
+                         coef_v, coef_u, gains, xer, xei, xor, xoi):
+    call = givens_mesh.deepgrid_fwd_pallas_call(
+        deep.n, deep.n_layers, deep.to, deep.ti, deep.n_columns,
+        block_b, nb, detect_last, interpret)
+    pv, pu = deep_grid_parity_arrays(deep)
+    n_out = 2 if detect_last else 4
+    outs = call(coef_v, pv, coef_u, pu, gains, xer, xei, xor, xoi)
+    # residuals: coefficients/gains + the input planes + every tile's two
+    # pre-gain stage boundaries — everything inside a mesh is recomputed
+    # by the reversed inverse sweep, and every layer-boundary state is an
+    # elementwise function of the saved post-U stages
+    return tuple(outs[:n_out]), (coef_v, coef_u, gains,
+                                 (xer, xei, xor, xoi), tuple(outs[n_out:]))
+
+
+def _deepgrid_planes_bwd(deep, block_b, nb, interpret, detect_last, res,
+                         cot):
+    coef_v, coef_u, gains, xplanes, stages = res
+    call = givens_mesh.deepgrid_bwd_pallas_call(
+        deep.n, deep.n_layers, deep.to, deep.ti, deep.n_columns,
+        block_b, nb, detect_last, interpret)
+    pv, pu = deep_grid_parity_arrays(deep)
+    dcv, dcu, dg, dxer, dxei, dxor, dxoi = call(
+        givens_mesh.inverse_coefficients(coef_v),
+        givens_mesh.adjoint_coefficients(coef_v), pv,
+        givens_mesh.inverse_coefficients(coef_u),
+        givens_mesh.adjoint_coefficients(coef_u), pu,
+        gains, *xplanes, *stages, *cot)
+    # the combine's transpose (sum of each input tile's cotangent over the
+    # To rows) already ran inside the kernel — dx comes back as [B, Ti, P]
+    return dcv, dcu, dg, dxer, dxei, dxor, dxoi
+
+
+_deepgrid_planes.defvjp(_deepgrid_planes_fwd, _deepgrid_planes_bwd)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1))
-def _pack_network_impl(net, hardware, layers):
-    """Stacked [L, C, 8, P] coefficients + [L, 12, P] gains for the
-    megakernel, identity-padded to the schedule's common column count."""
-    c = net.n_columns
+def _pack_deep_grid_impl(deep, hardware, layers):
+    """Stacked [L, To, Ti, C, 8, P] coefficients + [L, To, Ti, 12, P]
+    gains for the deep megakernel, identity-padded to the network-wide
+    column count.  Per-tile gains use the layer layout (g0 input screens,
+    g1 attenuation + folded mid screens, g2 digital scale + output
+    screen)."""
+    c = deep.n_columns
     coef_v, coef_u, gains = [], [], []
-    for (sv, su), la in zip(net.layers, layers):
-        coef_v.append(pad_columns(
-            _mesh_coefficients(sv, la["v"], hardware, la.get("key_v")), c))
-        coef_u.append(pad_columns(
-            _mesh_coefficients(su, la["u"], hardware, la.get("key_u")), c))
-        gains.append(_layer_gains(net.n, la))
+    for slayer, tlayer in zip(deep.layers, layers):
+        cv_l, cu_l, g_l = [], [], []
+        for srow, trow in zip(slayer, tlayer):
+            cv_row, cu_row, g_row = [], [], []
+            for (sv, su), ta in zip(srow, trow):
+                cv_row.append(pad_columns(
+                    _mesh_coefficients(sv, ta["v"], hardware,
+                                       ta.get("key_v")), c))
+                cu_row.append(pad_columns(
+                    _mesh_coefficients(su, ta["u"], hardware,
+                                       ta.get("key_u")), c))
+                g_row.append(_layer_gains(deep.n, ta))
+            cv_l.append(jnp.stack(cv_row))
+            cu_l.append(jnp.stack(cu_row))
+            g_l.append(jnp.stack(g_row))
+        coef_v.append(jnp.stack(cv_l))
+        coef_u.append(jnp.stack(cu_l))
+        gains.append(jnp.stack(g_l))
     return (jnp.stack(coef_v), jnp.stack(coef_u), jnp.stack(gains))
-
-
-#: VMEM working-set target for the fused network sweep (well under the
-#: ~16 MB/core budget: the backward also holds 2 coefficient tensors per
-#: mesh plus the gradient accumulators).
-_NETWORK_VMEM_TARGET = 4 * 1024 * 1024
-
-
-def _network_auto_block(b: int, block_b: int | None, n: int,
-                        n_layers: int) -> int:
-    """Pick the batch block for the megakernel.
-
-    ``None`` sizes the block so the resident planes — 8 stage-residual
-    planes per layer plus ~12 working planes — fit the VMEM target: small
-    networks get large blocks (fewer grid revisits of the coefficient
-    accumulators), deep/wide ones shrink toward the classic 128.
-    """
-    if block_b is None:
-        per_row = (8 * n_layers + 12) * (n // 2) * 4
-        block_b = max(8, min(1024, _NETWORK_VMEM_TARGET // per_row))
-    return _auto_block(b, block_b)
-
-
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _rfnn_network_apply_impl(net, block_b, interpret, coef_v, coef_u, gains,
-                             x):
-    TRACE_COUNTS["rfnn_network"] += 1  # python side effect: trace time only
-    n = net.n
-    batch_shape = x.shape[:-1]
-    x2 = x.reshape((-1, n)).astype(jnp.complex64)
-    bb = _network_auto_block(x2.shape[0], block_b, n, net.n_layers)
-    x2, b_orig = _pad_batch(x2, bb)
-    nb = x2.shape[0] // bb
-    planes = ref.split_channels(x2)
-    oe, oo = _network_planes(net, bb, nb, interpret, coef_v, coef_u, gains,
-                             *planes)
-    out = jnp.stack([oe, oo], axis=-1).reshape((-1, n))[:b_orig]
-    return out.reshape(batch_shape + (n,))
 
 
 def _contains_tracer(tree) -> bool:
@@ -489,7 +499,7 @@ class _LeafIdCache:
         self._entries.clear()
 
 
-_NETWORK_PACK_CACHE = _LeafIdCache(maxsize=8)
+_DEEPGRID_PACK_CACHE = _LeafIdCache(maxsize=8)
 
 _SHARED_LEAF_CACHES: dict = {}
 
@@ -510,242 +520,148 @@ def memoize_by_leaf_ids(static_key, tree, builder):
     return cache.get_or_build(static_key, tree, builder)
 
 
-def pack_network(layers, *, n: int, plans=None,
-                 hardware: hw_lib.HardwareModel | None = None):
-    """Emit the megakernel inputs for an L-layer RFNN program.
+def pack_deep_grid(layers, *, n: int, plans=None,
+                   hardware: hw_lib.HardwareModel | None = None,
+                   _event: str = "deep_apply"):
+    """Emit the deep megakernel inputs for L layers of (To x Ti) tiles.
 
-    Returns ``(net, (coef_v, coef_u, gains))``: the static
-    :class:`~repro.kernels.schedule.NetworkSchedule` plus the stacked
-    ``[L, C, 8, P]`` coefficient tensors and ``[L, 12, P]`` gain rows,
-    identity-padded to the schedule's common column count.  This is the
-    packing step of :func:`rfnn_network`, exposed so offline compilation
-    (``repro.compile.lower``) can emit — and pre-warm — the exact tensors
-    the serving path consumes.  Results go through the leaf-identity pack
-    cache: a later :func:`rfnn_network` call with the same (immutable)
-    layer arrays reuses them with zero packing work.  Tracer leaves
-    bypass the cache so gradients flow through packing.
+    ``layers``: nested ``[L][To][Ti]`` sequence of per-tile dicts with
+    keys ``v``/``u`` (mesh params, optional ``alpha_in``/``alpha``
+    screens), ``atten`` ([n] diagonal), optional ``scale`` (digital
+    gamma) and, with ``hardware``, optional ``key_v``/``key_u``
+    phase-noise keys.  ``plans``: matching ``[L][To][Ti]`` nesting of
+    ``(v_plan, u_plan)`` pairs (or ``None`` entries for Clements).
+
+    Returns ``(deep, (coef_v, coef_u, gains))``: the static
+    :class:`~repro.kernels.schedule.DeepGridSchedule` plus the stacked
+    ``[L, To, Ti, C, 8, P]`` coefficient tensors and
+    ``[L, To, Ti, 12, P]`` gain rows, identity-padded to the
+    network-wide column count — ready for :func:`deep_apply`'s
+    ``packed=``.  Results go through the leaf-identity pack cache
+    (``PACK_EVENTS``): repeat calls with the same (immutable) tile
+    arrays do zero packing work; tracer leaves bypass so gradients flow
+    through packing.
     """
-    layers = tuple(layers)
-    net = network_schedule(n, len(layers), plans)
+    layers = tuple(tuple(tuple(row) for row in layer) for layer in layers)
+    deep = deep_grid_schedule(n, len(layers), len(layers[0]),
+                              len(layers[0][0]), plans)
 
     def build():
-        PACK_EVENTS["rfnn_network"] += 1
-        return _pack_network_impl(net, hardware, layers)
+        PACK_EVENTS[_event] += 1
+        return _pack_deep_grid_impl(deep, hardware, layers)
 
     if _contains_tracer(layers):
-        return net, build()
-    return net, _NETWORK_PACK_CACHE.get_or_build(
-        (net, hardware), layers, build)
+        return deep, build()
+    return deep, _DEEPGRID_PACK_CACHE.get_or_build(
+        (deep, hardware), layers, build)
 
 
-def rfnn_network(layers, x: Array, *, n: int,
-                 plans=None,
-                 hardware: hw_lib.HardwareModel | None = None,
-                 block_b: int | None = None,
-                 interpret: bool | None = None,
-                 packed=None) -> Array:
-    """The fused L-layer RFNN |.. |scale_l * U_l(D_l(V_l ..))| .. | sweep.
+#: VMEM working-set target for the fused sweeps (well under the ~16
+#: MB/core budget: the backward also holds 2 coefficient tensors per mesh
+#: plus the gradient accumulators).
+_VMEM_TARGET = 4 * 1024 * 1024
 
-    ``layers``: per-layer dicts with keys ``v``/``u`` (mesh params,
-    optional ``alpha_in``/``alpha`` screens), ``atten`` ([n] diagonal),
-    optional ``scale`` (digital gamma, default 1) and, with ``hardware``,
-    optional ``key_v``/``key_u`` phase-noise keys — the same split an
-    :class:`repro.core.analog_linear.AnalogLinear` layer consumes, so the
-    megakernel is draw-for-draw comparable with the per-layer paths.
-    ``plans``: per-layer ``(v_plan, u_plan)`` pairs (default Clements).
 
-    One ``pallas_call`` forward and one backward for the whole network:
-    inter-layer activations never leave VMEM, and the backward saves only
-    the layer-boundary magnitudes (DESIGN.md, "Network megakernel").
+def _vmem_auto_block(b: int, block_b: int | None, n: int,
+                     planes_per_row: int) -> int:
+    """The one VMEM-budget batch-block helper (every kernel's auto-block
+    is this function with its own plane count).
 
-    Packed coefficients are cached per (schedule, param identity): repeat
-    calls with the same (immutable) arrays — the serving steady state — do
-    zero packing work.  Tracers bypass the cache, so gradients flow
-    through packing exactly as in the per-layer path.  ``block_b=None``
-    sizes the batch block to the kernel's VMEM target (large blocks for
-    small networks, shrinking with n and L).
+    ``None`` sizes the block so ``planes_per_row`` resident [block, P]
+    f32 planes fit the VMEM target — small problems get large blocks
+    (fewer grid revisits of the coefficient accumulators), deep/wide
+    ones shrink toward the classic 128 — then shrinks for small batches.
 
-    ``packed``: an explicit ``pack_network`` result ``(net, tensors)`` —
-    callers that emitted their coefficients offline (compiled analog
-    programs) hand them back here and skip the pack/cache lookup
-    entirely, so their zero-packing guarantee cannot be evicted out from
-    under them by other users of the shared cache.
+    The same target applies in interpret mode: the stacked-sweep bodies
+    make grid steps cheap (one fori_loop per mesh regardless of the tile
+    count), and a VMEM-sized block is also a host-cache-sized block, so
+    a deep grid's batch blocks ride through all L layers while hot —
+    the locality the fused kernel exists to buy.
     """
-    if interpret is None:
-        interpret = _default_interpret()
-    KERNEL_PATH_CALLS["rfnn_network"] += 1
-    if packed is None:
-        packed = pack_network(layers, n=n, plans=plans, hardware=hardware)
-    net, tensors = packed
-    return _rfnn_network_apply_impl(net, block_b, interpret, *tensors, x)
-
-
-# ---------------------------------------------------------------------------
-# Tile-grid megakernel: a (To x Ti) grid of analog tiles in one fused sweep
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def _tilegrid_planes(grid, block_b, nb, interpret, coef_v, coef_u, gains,
-                     xer, xei, xor, xoi):
-    call = givens_mesh.tilegrid_pallas_call(
-        grid.n, grid.to, grid.ti, grid.n_columns, block_b, nb, interpret)
-    pv, pu = tile_grid_parity_arrays(grid)
-    return tuple(call(coef_v, pv, coef_u, pu, gains, xer, xei, xor, xoi))
-
-
-def _tilegrid_planes_fwd(grid, block_b, nb, interpret, coef_v, coef_u, gains,
-                         xer, xei, xor, xoi):
-    call = givens_mesh.tilegrid_fwd_pallas_call(
-        grid.n, grid.to, grid.ti, grid.n_columns, block_b, nb, interpret)
-    pv, pu = tile_grid_parity_arrays(grid)
-    oer, oei, oor, ooi, *stages = call(coef_v, pv, coef_u, pu, gains,
-                                       xer, xei, xor, xoi)
-    # residuals: coefficients/gains + the input planes + every tile's two
-    # pre-gain stage boundaries — everything inside a mesh is recomputed
-    # by the reversed inverse sweep, same rule as the other kernels
-    return (oer, oei, oor, ooi), (coef_v, coef_u, gains,
-                                  (xer, xei, xor, xoi), tuple(stages))
-
-
-def _tilegrid_planes_bwd(grid, block_b, nb, interpret, res, cot):
-    coef_v, coef_u, gains, xplanes, stages = res
-    call = givens_mesh.tilegrid_bwd_pallas_call(
-        grid.n, grid.to, grid.ti, grid.n_columns, block_b, nb, interpret)
-    pv, pu = tile_grid_parity_arrays(grid)
-    dcv, dcu, dg, dxer, dxei, dxor, dxoi = call(
-        givens_mesh.inverse_coefficients(coef_v),
-        givens_mesh.adjoint_coefficients(coef_v), pv,
-        givens_mesh.inverse_coefficients(coef_u),
-        givens_mesh.adjoint_coefficients(coef_u), pu,
-        gains, *xplanes, *stages, *cot)
-    # dx arrives as per-row partials [To, B, Ti, P] (each grid step writes
-    # its own slab); the sum over rows is the transpose of the combine
-    return (dcv, dcu, dg, jnp.sum(dxer, axis=0), jnp.sum(dxei, axis=0),
-            jnp.sum(dxor, axis=0), jnp.sum(dxoi, axis=0))
-
-
-_tilegrid_planes.defvjp(_tilegrid_planes_fwd, _tilegrid_planes_bwd)
-
-
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _pack_tile_grid_impl(grid, hardware, tiles):
-    """Stacked [To, Ti, C, 8, P] coefficients + [To, Ti, 12, P] gains for
-    the tile-grid kernel, identity-padded to the grid's common column
-    count.  Per-tile gains reuse the network layer layout (g0 input
-    screens, g1 attenuation + folded mid screens, g2 digital scale +
-    output screen)."""
-    c = grid.n_columns
-    coef_v, coef_u, gains = [], [], []
-    for srow, trow in zip(grid.tiles, tiles):
-        cv_row, cu_row, g_row = [], [], []
-        for (sv, su), ta in zip(srow, trow):
-            cv_row.append(pad_columns(
-                _mesh_coefficients(sv, ta["v"], hardware, ta.get("key_v")),
-                c))
-            cu_row.append(pad_columns(
-                _mesh_coefficients(su, ta["u"], hardware, ta.get("key_u")),
-                c))
-            g_row.append(_layer_gains(grid.n, ta))
-        coef_v.append(jnp.stack(cv_row))
-        coef_u.append(jnp.stack(cu_row))
-        gains.append(jnp.stack(g_row))
-    return (jnp.stack(coef_v), jnp.stack(coef_u), jnp.stack(gains))
-
-
-_TILEGRID_PACK_CACHE = _LeafIdCache(maxsize=8)
-
-
-def pack_tile_grid(tiles, *, n: int, plans=None,
-                   hardware: hw_lib.HardwareModel | None = None):
-    """Emit the tile-grid kernel inputs for a (To x Ti) grid of tiles.
-
-    ``tiles``: nested ``[To][Ti]`` sequence of per-tile dicts with keys
-    ``v``/``u`` (mesh params, optional ``alpha_in``/``alpha`` screens),
-    ``atten`` ([n] diagonal), optional ``scale`` (digital gamma) and, with
-    ``hardware``, optional ``key_v``/``key_u`` phase-noise keys — the same
-    argument shape one :func:`rfnn_network` layer consumes.  Returns
-    ``(grid, (coef_v, coef_u, gains))`` ready for :func:`tiled_apply`'s
-    ``packed=``.  Results go through the tile-grid leaf-identity pack
-    cache (``PACK_EVENTS["tiled_apply"]``): repeat calls with the same
-    (immutable) tile arrays do zero packing work; tracers bypass so
-    gradients flow through packing.
-    """
-    tiles = tuple(tuple(row) for row in tiles)
-    grid = tile_grid_schedule(n, len(tiles), len(tiles[0]), plans)
-
-    def build():
-        PACK_EVENTS["tiled_apply"] += 1
-        return _pack_tile_grid_impl(grid, hardware, tiles)
-
-    if _contains_tracer(tiles):
-        return grid, build()
-    return grid, _TILEGRID_PACK_CACHE.get_or_build(
-        (grid, hardware), tiles, build)
-
-
-def _tilegrid_auto_block(b: int, block_b: int | None, n: int,
-                         ti: int) -> int:
-    """Batch block for the tile-grid kernel: ``None`` sizes the block so
-    the resident planes — 8 stage-residual planes per input tile plus the
-    4 x Ti input and working planes — fit the VMEM target, like the
-    network kernel's auto-blocking."""
     if block_b is None:
-        per_row = (12 * ti + 8) * (n // 2) * 4
-        block_b = max(8, min(1024, _NETWORK_VMEM_TARGET // per_row))
+        per_row = planes_per_row * (n // 2) * 4
+        block_b = max(8, min(1024, _VMEM_TARGET // per_row // 8 * 8))
     return _auto_block(b, block_b)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _tiled_apply_impl(grid, block_b, interpret, coef_v, coef_u, gains, x):
-    TRACE_COUNTS["tiled_apply"] += 1  # python side effect: trace time only
-    n, to, ti = grid.n, grid.to, grid.ti
-    batch_shape = x.shape[:-1]
-    xt = x.reshape((-1, ti, n)).astype(jnp.complex64)
-    bb = _tilegrid_auto_block(xt.shape[0], block_b, n, ti)
-    xt, b_orig = _pad_batch(xt, bb)
-    nb = xt.shape[0] // bb
-    xe, xo = xt[..., 0::2], xt[..., 1::2]          # [B, Ti, P] per plane
-    planes = (jnp.real(xe).astype(jnp.float32),
-              jnp.imag(xe).astype(jnp.float32),
-              jnp.real(xo).astype(jnp.float32),
-              jnp.imag(xo).astype(jnp.float32))
-    oer, oei, oor, ooi = _tilegrid_planes(grid, bb, nb, interpret,
-                                          coef_v, coef_u, gains, *planes)
+def _deep_planes_per_row(deep) -> int:
+    """Resident [block, P] planes per batch row for the deep kernel: 8
+    stage-residual planes per tile per layer, 4 input and 4 output planes
+    per tile column / row slot, ~4 working planes.  Reduces to the
+    network kernel's ``8 L + 12`` at To = Ti = 1."""
+    return 8 * deep.n_layers * deep.to * deep.ti + 4 * deep.ti \
+        + 4 * deep.to + 4
+
+
+def _split_tile_planes(xt):
+    """[B, Ti, n] complex -> 4 de-interleaved [B, Ti, P] f32 planes."""
+    xe, xo = xt[..., 0::2], xt[..., 1::2]
+    return (jnp.real(xe).astype(jnp.float32),
+            jnp.imag(xe).astype(jnp.float32),
+            jnp.real(xo).astype(jnp.float32),
+            jnp.imag(xo).astype(jnp.float32))
+
+
+def _merge_deep_out(outs, detect_last, to, n, b_orig, batch_shape):
+    """Kernel output planes -> [..., To*n] (real magnitudes or complex)."""
+    if detect_last:
+        oe, oo = outs                              # [B, To, P] real
+        y = jnp.stack([oe, oo], axis=-1).reshape((-1, to * n))[:b_orig]
+        return y.reshape(batch_shape + (to * n,))
+    oer, oei, oor, ooi = outs
     ye = oer + 1j * oei                            # [B, To, P]
     yo = oor + 1j * ooi
     y = jnp.stack([ye, yo], axis=-1).reshape((-1, to * n))[:b_orig]
     return y.astype(jnp.complex64).reshape(batch_shape + (to * n,))
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _deep_apply_impl(deep, block_b, interpret, detect_last, trace_key,
+                     coef_v, coef_u, gains, x):
+    TRACE_COUNTS[trace_key] += 1  # python side effect: trace time only
+    n, to, ti = deep.n, deep.to, deep.ti
+    batch_shape = x.shape[:-1]
+    xt = x.reshape((-1, ti, n)).astype(jnp.complex64)
+    bb = _vmem_auto_block(xt.shape[0], block_b, n,
+                          _deep_planes_per_row(deep))
+    xt, b_orig = _pad_batch(xt, bb)
+    nb = xt.shape[0] // bb
+    outs = _deepgrid_planes(deep, bb, nb, interpret, detect_last,
+                            coef_v, coef_u, gains, *_split_tile_planes(xt))
+    return _merge_deep_out(outs, detect_last, to, n, b_orig, batch_shape)
+
+
 # ---------------------------------------------------------------------------
-# Sharded tile-grid megakernel: (tile-row x batch) grid over a jax.Mesh
+# Sharded deep megakernel: (tile-row x batch) grid over a jax.Mesh
 # ---------------------------------------------------------------------------
 #
-# The tile-grid kernel's pallas grid is (To x batch blocks); past one
-# device's VMEM, the same grid shards over a 2-axis ``jax.Mesh`` via
-# shard_map: each device runs the *identical* pallas call on its
-# (To/rows)-row slab with its batch shard.  The forward needs no
-# collective — every row's combine is local to the device holding that
-# row.  The backward's input cotangent is the transpose of the row
-# combine: each device sums its local per-row partials, and a ``psum``
-# over the row axis finishes the reduction — the matched-line power
-# combiner's exact distributed analog.  The pallas calls take only
-# dimensions as statics (all per-tile structure rides in the
-# parity/coefficient *operands*), so the row-local call is the same
-# program on every device and needs no per-shard statics.
+# Past one device's VMEM, each layer's (To x Ti) grid shards over a
+# 2-axis ``jax.Mesh`` via shard_map: every device runs the *identical*
+# single-layer pallas call on its (To/rows)-row slab with its batch
+# shard.  The forward needs no collective — every row's combine is local
+# to the device holding that row.  The backward's input cotangent is the
+# transpose of the row combine: the kernel sums its local rows' partials
+# in VMEM, and a ``psum`` over the row axis finishes the reduction — the
+# matched-line power combiner's exact distributed analog.  Depth does NOT
+# fuse across devices: a layer's re-detected outputs are each next
+# layer's *full* input, so L > 1 runs as a python chain of single-layer
+# sharded calls (one resharding row->replicated per boundary, inserted by
+# GSPMD), with the boundary |detect| taken inside the kernel
+# (``detect_last=True``) so its zero-guarded backward keeps padded batch
+# rows grad-exact.
 #
 # Coefficient operands enter the shard_map REPLICATED (in_spec P()) and
-# each device slices its own row slab in-body by ``axis_index``; the
-# backward all-gathers the coefficient grads back to replicated.  They
-# are small (To*Ti*C*8*P floats), and splitting them on the row axis
-# instead trips a GSPMD bug on this jax version: under an enclosing jit
-# on a multi-axis mesh, concatenate/stack-built values (exactly what
-# ``pack_tile_grid`` emits when traced, e.g. under ``jit(grad(...))``)
-# feeding a shard_map along a partitioned axis get mis-partitioned —
-# row shards arrive summed, corrupting forward and backward alike.
-# Replicated operands take the all-gather path, which is sound (the
-# batch planes are safe either way: they are built with ``jnp.pad`` +
-# strided slices — see ``_pad_batch``).
+# each device slices its own row slab (axis 1 of [L, To, Ti, ...])
+# in-body by ``axis_index``; the backward all-gathers the coefficient
+# grads back to replicated.  They are small (L*To*Ti*C*8*P floats), and
+# splitting them on the row axis instead trips a GSPMD bug on this jax
+# version: under an enclosing jit on a multi-axis mesh, concatenate/
+# stack-built values (exactly what ``pack_deep_grid`` emits when traced,
+# e.g. under ``jit(grad(...))``) feeding a shard_map along a partitioned
+# axis get mis-partitioned — row shards arrive summed, corrupting forward
+# and backward alike.  Replicated operands take the all-gather path,
+# which is sound (the batch planes are safe either way: they are built
+# with ``jnp.pad`` + strided slices — see ``_pad_batch``).
 
 
 def _shard_specs(row_axis: str, data_axis: str):
@@ -761,137 +677,293 @@ def _shard_map(body, mesh, in_specs, out_specs):
                             out_specs=out_specs)
 
 
-def _row_slab(row_axis, to_local):
+def _row_slab(row_axis, to_local, axis):
     """In-body slice of a device's tile-row slab from a replicated
-    ``[To, ...]`` operand."""
+    operand whose ``axis`` is the To axis."""
     def sl(a):
         r = jax.lax.axis_index(row_axis)
-        return jax.lax.dynamic_slice_in_dim(a, r * to_local, to_local, 0)
+        return jax.lax.dynamic_slice_in_dim(a, r * to_local, to_local, axis)
     return sl
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
-def _tilegrid_planes_sharded(grid, mesh, row_axis, data_axis, block_b, nb,
-                             interpret, coef_v, coef_u, gains,
-                             xer, xei, xor, xoi):
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
+def _deepgrid_planes_sharded(deep, layer, mesh, row_axis, data_axis,
+                             block_b, nb, interpret, detect_last,
+                             coef_v, coef_u, gains, xer, xei, xor, xoi):
     specs = _shard_specs(row_axis, data_axis)
-    to_local = grid.to // mesh.shape[row_axis]
-    pv, pu = tile_grid_parity_arrays(grid)
+    to_local = deep.to // mesh.shape[row_axis]
+    pv, pu = deep_grid_parity_arrays(deep)
+    pv, pu = pv[layer:layer + 1], pu[layer:layer + 1]
 
     def body(cv, pv, cu, pu, g, xer, xei, xor, xoi):
-        sl = _row_slab(row_axis, to_local)
-        call = givens_mesh.tilegrid_pallas_call(
-            grid.n, to_local, grid.ti, grid.n_columns, block_b, nb,
-            interpret)
+        sl = _row_slab(row_axis, to_local, 1)
+        call = givens_mesh.deepgrid_pallas_call(
+            deep.n, 1, to_local, deep.ti, deep.n_columns, block_b, nb,
+            detect_last, interpret)
         return tuple(call(sl(cv), sl(pv), sl(cu), sl(pu), sl(g),
                           xer, xei, xor, xoi))
 
+    n_out = 2 if detect_last else 4
     fn = _shard_map(body, mesh,
                     (specs.coef,) * 5 + (specs.x_plane,) * 4,
-                    (specs.o_plane,) * 4)
+                    (specs.o_plane,) * n_out)
     return fn(coef_v, pv, coef_u, pu, gains, xer, xei, xor, xoi)
 
 
-def _tilegrid_planes_sharded_fwd(grid, mesh, row_axis, data_axis, block_b,
-                                 nb, interpret, coef_v, coef_u, gains,
-                                 xer, xei, xor, xoi):
+def _deepgrid_planes_sharded_fwd(deep, layer, mesh, row_axis, data_axis,
+                                 block_b, nb, interpret, detect_last,
+                                 coef_v, coef_u, gains, xer, xei, xor, xoi):
     specs = _shard_specs(row_axis, data_axis)
-    to_local = grid.to // mesh.shape[row_axis]
-    pv, pu = tile_grid_parity_arrays(grid)
+    to_local = deep.to // mesh.shape[row_axis]
+    pv, pu = deep_grid_parity_arrays(deep)
+    pv, pu = pv[layer:layer + 1], pu[layer:layer + 1]
 
     def body(cv, pv, cu, pu, g, xer, xei, xor, xoi):
-        sl = _row_slab(row_axis, to_local)
-        call = givens_mesh.tilegrid_fwd_pallas_call(
-            grid.n, to_local, grid.ti, grid.n_columns, block_b, nb,
-            interpret)
+        sl = _row_slab(row_axis, to_local, 1)
+        call = givens_mesh.deepgrid_fwd_pallas_call(
+            deep.n, 1, to_local, deep.ti, deep.n_columns, block_b, nb,
+            detect_last, interpret)
         return tuple(call(sl(cv), sl(pv), sl(cu), sl(pu), sl(g),
                           xer, xei, xor, xoi))
 
+    n_out = 2 if detect_last else 4
     fn = _shard_map(body, mesh,
                     (specs.coef,) * 5 + (specs.x_plane,) * 4,
-                    (specs.o_plane,) * 4 + (specs.stage,) * 8)
-    oer, oei, oor, ooi, *stages = fn(coef_v, pv, coef_u, pu, gains,
-                                     xer, xei, xor, xoi)
+                    (specs.o_plane,) * n_out + (specs.stage,) * 8)
+    outs = fn(coef_v, pv, coef_u, pu, gains, xer, xei, xor, xoi)
     # residuals keep their shardings inside the enclosing jit: coefficient
-    # stacks stay row-split, stage planes stay (row x batch)-split, so the
-    # backward's shard_map consumes them without any resharding
-    return (oer, oei, oor, ooi), (coef_v, coef_u, gains,
-                                  (xer, xei, xor, xoi), tuple(stages))
+    # stacks stay replicated, stage planes stay (row x batch)-split, so
+    # the backward's shard_map consumes them without any resharding
+    return tuple(outs[:n_out]), (coef_v, coef_u, gains,
+                                 (xer, xei, xor, xoi), tuple(outs[n_out:]))
 
 
-def _tilegrid_planes_sharded_bwd(grid, mesh, row_axis, data_axis, block_b,
-                                 nb, interpret, res, cot):
+def _deepgrid_planes_sharded_bwd(deep, layer, mesh, row_axis, data_axis,
+                                 block_b, nb, interpret, detect_last, res,
+                                 cot):
     coef_v, coef_u, gains, xplanes, stages = res
     specs = _shard_specs(row_axis, data_axis)
-    to_local = grid.to // mesh.shape[row_axis]
-    pv, pu = tile_grid_parity_arrays(grid)
+    to_local = deep.to // mesh.shape[row_axis]
+    pv, pu = deep_grid_parity_arrays(deep)
+    pv, pu = pv[layer:layer + 1], pu[layer:layer + 1]
 
     def body(cv, pv, cu, pu, g, xer, xei, xor, xoi, *rest):
-        sl = _row_slab(row_axis, to_local)
+        sl = _row_slab(row_axis, to_local, 1)
         cv, pv, cu, pu, g = sl(cv), sl(pv), sl(cu), sl(pu), sl(g)
-        call = givens_mesh.tilegrid_bwd_pallas_call(
-            grid.n, to_local, grid.ti, grid.n_columns, block_b, nb,
-            interpret)
+        call = givens_mesh.deepgrid_bwd_pallas_call(
+            deep.n, 1, to_local, deep.ti, deep.n_columns, block_b, nb,
+            detect_last, interpret)
         dcv, dcu, dg, dxer, dxei, dxor, dxoi = call(
             givens_mesh.inverse_coefficients(cv),
             givens_mesh.adjoint_coefficients(cv), pv,
             givens_mesh.inverse_coefficients(cu),
             givens_mesh.adjoint_coefficients(cu), pu,
             g, xer, xei, xor, xoi, *rest)
-        # dx arrives as per-row partials [To_local, B, Ti, P]: the local
-        # sum over this device's rows, then the psum over the row axis,
-        # complete the transpose of the (now distributed) row combine
-        dx = tuple(jax.lax.psum(jnp.sum(d, axis=0), row_axis)
+        # the kernel already summed its local rows' input-cotangent
+        # partials; the psum over the row axis completes the transpose of
+        # the (now distributed) row combine
+        dx = tuple(jax.lax.psum(d, row_axis)
                    for d in (dxer, dxei, dxor, dxoi))
         # coefficient grads: psum over the batch axis (the usual DP
         # gradient reduction of per-shard partials), then an all-gather
-        # over the row axis hands every device the full replicated grad
-        # — matching the replicated primal operands, so the packing
-        # transpose outside never consumes a row-partitioned value
+        # over the row axis (axis 1 = To of the [L, To, Ti, ...] stacks)
+        # hands every device the full replicated grad — matching the
+        # replicated primal operands, so the packing transpose outside
+        # never consumes a row-partitioned value
         dcv, dcu, dg = (
             jax.lax.all_gather(jax.lax.psum(d, data_axis), row_axis,
-                               axis=0, tiled=True)
+                               axis=1, tiled=True)
             for d in (dcv, dcu, dg))
         return (dcv, dcu, dg) + dx
 
+    n_cot = 2 if detect_last else 4
     fn = _shard_map(
         body, mesh,
         (specs.coef,) * 5 + (specs.x_plane,) * 4 + (specs.stage,) * 8
-        + (specs.o_plane,) * 4,
+        + (specs.o_plane,) * n_cot,
         (specs.coef,) * 3 + (specs.dx_plane,) * 4)
     return tuple(fn(coef_v, pv, coef_u, pu, gains,
                     *xplanes, *stages, *cot))
 
 
-_tilegrid_planes_sharded.defvjp(_tilegrid_planes_sharded_fwd,
-                                _tilegrid_planes_sharded_bwd)
+_deepgrid_planes_sharded.defvjp(_deepgrid_planes_sharded_fwd,
+                                _deepgrid_planes_sharded_bwd)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5))
-def _tiled_apply_sharded_impl(grid, mesh, row_axis, data_axis, block_b,
-                              interpret, coef_v, coef_u, gains, x):
-    TRACE_COUNTS["tiled_apply_sharded"] += 1  # python side effect: trace only
-    n, to, ti = grid.n, grid.to, grid.ti
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _deep_apply_sharded_impl(deep, mesh, row_axis, data_axis, block_b,
+                             interpret, detect_last, trace_key,
+                             coef_v, coef_u, gains, x):
+    TRACE_COUNTS[trace_key] += 1  # python side effect: trace time only
+    n, to, ti = deep.n, deep.to, deep.ti
     batch_shape = x.shape[:-1]
     xt = x.reshape((-1, ti, n)).astype(jnp.complex64)
     n_data = mesh.shape[data_axis]
-    bb = _tilegrid_auto_block(max(1, -(-xt.shape[0] // n_data)), block_b,
-                              n, ti)
+    bb = _vmem_auto_block(max(1, -(-xt.shape[0] // n_data)), block_b, n,
+                          _deep_planes_per_row(deep))
     # every device's batch shard must tile into whole blocks
     xt, b_orig = _pad_batch(xt, bb * n_data)
     nb = xt.shape[0] // n_data // bb
-    xe, xo = xt[..., 0::2], xt[..., 1::2]          # [B, Ti, P] per plane
-    planes = (jnp.real(xe).astype(jnp.float32),
-              jnp.imag(xe).astype(jnp.float32),
-              jnp.real(xo).astype(jnp.float32),
-              jnp.imag(xo).astype(jnp.float32))
-    oer, oei, oor, ooi = _tilegrid_planes_sharded(
-        grid, mesh, row_axis, data_axis, bb, nb, interpret,
-        coef_v, coef_u, gains, *planes)
-    ye = oer + 1j * oei                            # [B, To, P]
-    yo = oor + 1j * ooi
-    y = jnp.stack([ye, yo], axis=-1).reshape((-1, to * n))[:b_orig]
-    return y.astype(jnp.complex64).reshape(batch_shape + (to * n,))
+    planes = _split_tile_planes(xt)
+    outs = None
+    for l in range(deep.n_layers):
+        last = l == deep.n_layers - 1
+        outs = _deepgrid_planes_sharded(
+            deep, l, mesh, row_axis, data_axis, bb, nb, interpret,
+            detect_last if last else True,
+            coef_v[l:l + 1], coef_u[l:l + 1], gains[l:l + 1], *planes)
+        if not last:
+            # layer boundary: the re-detected To rows are the next
+            # layer's Ti real inputs (To == Ti whenever L > 1); the
+            # boundary |detect| ran inside the kernel, so its backward is
+            # the zero-guarded z/|z| — exact zeros on padded batch rows
+            oe, oo = outs
+            zero = jnp.zeros_like(oe)
+            planes = (oe, zero, oo, zero)
+    return _merge_deep_out(outs, detect_last, to, n, b_orig, batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def deep_apply(layers, x: Array, *, n: int, plans=None,
+               hardware: hw_lib.HardwareModel | None = None,
+               block_b: int | None = None,
+               interpret: bool | None = None, packed=None,
+               readout: str = "magnitude",
+               mesh=None, row_axis: str = "rows",
+               data_axis: str = "data",
+               _trace_key: str = "deep_apply") -> Array:
+    """A whole deep tiled network — L layers of a (To x Ti) analog tile
+    grid — in ONE ``pallas_call`` per direction.
+
+    ``layers``/``plans``/``hardware``: see :func:`pack_deep_grid`.  ``x``
+    is ``[..., Ti*n]``; each layer's rows combine their Ti tile outputs
+    coherently in VMEM (the matched-line power combiner) and the
+    re-detected row magnitudes feed the next layer *inside the kernel* —
+    inter-layer activations never touch HBM.  ``readout`` picks the last
+    layer's output: ``"magnitude"`` (default) applies the |detect| in
+    kernel and returns the real ``[..., To*n]`` magnitudes;
+    ``"complex"`` returns the combined complex row states so digital
+    readout modes (real part, detector noise) compose on top, outside
+    the kernel.  The custom VJP unwinds all layers in reverse inside one
+    backward kernel from the saved per-tile stage boundaries, with the
+    zero-guarded |detect| backward at every layer boundary.
+
+    ``packed``: an explicit :func:`pack_deep_grid` result — offline
+    compilation (``repro.compile.lower_deep``) hands it back here and
+    skips the pack/cache lookup entirely, so its zero-packing guarantee
+    cannot be evicted out from under it by other users of the shared
+    cache.  ``block_b=None`` sizes the batch block to the kernel's VMEM
+    target (large blocks for small grids, shrinking with n, L, To, Ti).
+
+    ``mesh``: an optional 2-axis ``jax.sharding.Mesh`` — each layer's
+    grid then shards over ``(row_axis, data_axis)`` via shard_map: tile
+    rows split over ``row_axis`` (To no longer has to fit one device),
+    batch over ``data_axis``, each device running the identical
+    row-local pallas call; depth runs as a chain of single-layer sharded
+    launches (a layer's outputs are the next layer's full input, so
+    depth cannot fuse across devices).  Semantics (fwd and VJP) match
+    the single-device call to float tolerance; requires
+    ``To % mesh.shape[row_axis] == 0``.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if readout not in ("magnitude", "complex"):
+        raise ValueError(f"readout must be 'magnitude' or 'complex', "
+                         f"got {readout!r}")
+    KERNEL_PATH_CALLS["deep_apply"] += 1
+    if packed is None:
+        packed = pack_deep_grid(layers, n=n, plans=plans, hardware=hardware)
+    deep, tensors = packed
+    detect_last = readout == "magnitude"
+    if x.shape[-1] != deep.ti * deep.n:
+        raise ValueError(
+            f"expected trailing dim {deep.ti * deep.n} "
+            f"(Ti={deep.ti} tiles of n={deep.n}), got {x.shape}")
+    if mesh is None:
+        return _deep_apply_impl(deep, block_b, interpret, detect_last,
+                                _trace_key, *tensors, x)
+    KERNEL_PATH_CALLS["deep_apply_sharded"] += 1
+    for ax in (row_axis, data_axis):
+        if ax not in mesh.shape:
+            raise ValueError(f"mesh has no axis {ax!r}: {dict(mesh.shape)}")
+    if deep.to % mesh.shape[row_axis]:
+        raise ValueError(
+            f"To={deep.to} tile rows do not shard over "
+            f"{mesh.shape[row_axis]} devices on axis {row_axis!r}")
+    return _deep_apply_sharded_impl(deep, mesh, row_axis, data_axis,
+                                    block_b, interpret, detect_last,
+                                    _trace_key + "_sharded", *tensors, x)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate-case wrappers: the network (To=Ti=1) and one-layer tile grid
+# ---------------------------------------------------------------------------
+
+def pack_network(layers, *, n: int, plans=None,
+                 hardware: hw_lib.HardwareModel | None = None):
+    """Emit the megakernel inputs for an L-layer RFNN program.
+
+    The To=Ti=1 degenerate case of :func:`pack_deep_grid`: ``layers`` is
+    a flat per-layer sequence of dicts (keys ``v``/``u``, ``atten``,
+    optional ``scale``/``key_v``/``key_u``) and ``plans`` a flat
+    per-layer sequence of ``(v_plan, u_plan)`` pairs.  Returns
+    ``(deep, (coef_v, coef_u, gains))`` in the deep-grid layout
+    (``[L, 1, 1, C, 8, P]`` coefficients), ready for
+    :func:`rfnn_network`'s ``packed=``.  Pack-cache semantics are
+    :func:`pack_deep_grid`'s, ticking ``PACK_EVENTS["rfnn_network"]``.
+    """
+    deep_layers = tuple(((la,),) for la in layers)
+    deep_plans = (None if plans is None
+                  else tuple(((p,),) for p in plans))
+    return pack_deep_grid(deep_layers, n=n, plans=deep_plans,
+                          hardware=hardware, _event="rfnn_network")
+
+
+def rfnn_network(layers, x: Array, *, n: int,
+                 plans=None,
+                 hardware: hw_lib.HardwareModel | None = None,
+                 block_b: int | None = None,
+                 interpret: bool | None = None,
+                 packed=None) -> Array:
+    """The fused L-layer RFNN |.. |scale_l * U_l(D_l(V_l ..))| .. | sweep.
+
+    A thin To=Ti=1 wrapper over :func:`deep_apply` with the in-kernel
+    |detect| readout — numerics, argument shapes (see
+    :func:`pack_network`) and pack-cache behavior are unchanged from the
+    dedicated network megakernel this path replaced: one ``pallas_call``
+    forward and one backward for the whole network, inter-layer
+    activations never leaving VMEM, packing cached per (schedule, param
+    identity) so serving steady state does zero packing work.
+    """
+    KERNEL_PATH_CALLS["rfnn_network"] += 1
+    if packed is None:
+        packed = pack_network(layers, n=n, plans=plans, hardware=hardware)
+    return deep_apply(None, x, n=n, block_b=block_b, interpret=interpret,
+                      packed=packed, readout="magnitude",
+                      _trace_key="rfnn_network")
+
+
+def pack_tile_grid(tiles, *, n: int, plans=None,
+                   hardware: hw_lib.HardwareModel | None = None):
+    """Emit the kernel inputs for a one-layer (To x Ti) grid of tiles.
+
+    The L=1 degenerate case of :func:`pack_deep_grid`: ``tiles`` is a
+    nested ``[To][Ti]`` sequence of per-tile dicts and ``plans`` a
+    matching nesting of ``(v_plan, u_plan)`` pairs.  Returns
+    ``(deep, (coef_v, coef_u, gains))`` in the deep-grid layout
+    (``[1, To, Ti, C, 8, P]`` coefficients), ready for
+    :func:`tiled_apply`'s ``packed=``.  Pack-cache semantics are
+    :func:`pack_deep_grid`'s, ticking ``PACK_EVENTS["tiled_apply"]``.
+    """
+    deep_layers = (tuple(tuple(row) for row in tiles),)
+    deep_plans = (None if plans is None
+                  else (tuple(tuple(row) for row in plans),))
+    return pack_deep_grid(deep_layers, n=n, plans=deep_plans,
+                          hardware=hardware, _event="tiled_apply")
 
 
 def tiled_apply(tiles, x: Array, *, n: int, plans=None,
@@ -903,51 +975,24 @@ def tiled_apply(tiles, x: Array, *, n: int, plans=None,
     """A (To x Ti) tile-grid matmul ``sum_i gamma U(D(V x_i))`` per row,
     in ONE ``pallas_call`` per direction.
 
-    ``tiles``/``plans``/``hardware``: see :func:`pack_tile_grid`.  ``x``
+    A thin L=1 wrapper over :func:`deep_apply` with the ``"complex"``
+    readout — numerics, argument shapes (see :func:`pack_tile_grid`),
+    pack-cache behavior and the ``mesh=`` sharded path are unchanged
+    from the dedicated tile-grid megakernel this path replaced.  ``x``
     is ``[..., Ti*n]`` and the result is the **complex** combined row
     output ``[..., To*n]`` — the matched-line power combiner sums the Ti
     tile outputs of each row coherently in VMEM, and the readout mode
     (|.| detection, real part) plus detector noise compose on top,
-    outside the kernel (they are ordinary JAX and differentiate
-    natively).  The custom VJP unwinds every tile from the same saved
-    stage boundaries the per-tile composition stores (post-V/post-U per
-    tile), so training matches the per-tile path gradient-for-gradient
-    with zero per-tile kernel launches.
-
-    ``packed``: an explicit :func:`pack_tile_grid` result — offline
-    compilation (``repro.compile.lower_tiled``) hands it back here and
-    skips the pack/cache lookup entirely.
-
-    ``mesh``: an optional 2-axis ``jax.sharding.Mesh`` — the same grid
-    then shards over ``(row_axis, data_axis)`` via shard_map: tile rows
-    split over ``row_axis`` (To no longer has to fit one device), batch
-    over ``data_axis``, each device running the identical row-local
-    pallas call.  Forward needs no collective (each row's combine is
-    device-local); the backward's input cotangent finishes with a
-    ``psum`` over ``row_axis`` — the distributed transpose of the
-    matched-line row combine.  Semantics (fwd and VJP) match the
-    single-device call to float tolerance; requires
-    ``To % mesh.shape[row_axis] == 0``.
+    outside the kernel.
     """
-    if interpret is None:
-        interpret = _default_interpret()
     KERNEL_PATH_CALLS["tiled_apply"] += 1
     if packed is None:
         packed = pack_tile_grid(tiles, n=n, plans=plans, hardware=hardware)
-    grid, tensors = packed
-    if x.shape[-1] != grid.ti * grid.n:
-        raise ValueError(
-            f"expected trailing dim {grid.ti * grid.n} "
-            f"(Ti={grid.ti} tiles of n={grid.n}), got {x.shape}")
-    if mesh is None:
-        return _tiled_apply_impl(grid, block_b, interpret, *tensors, x)
-    KERNEL_PATH_CALLS["tiled_apply_sharded"] += 1
-    for ax in (row_axis, data_axis):
-        if ax not in mesh.shape:
-            raise ValueError(f"mesh has no axis {ax!r}: {dict(mesh.shape)}")
-    if grid.to % mesh.shape[row_axis]:
-        raise ValueError(
-            f"To={grid.to} tile rows do not shard over "
-            f"{mesh.shape[row_axis]} devices on axis {row_axis!r}")
-    return _tiled_apply_sharded_impl(grid, mesh, row_axis, data_axis,
-                                     block_b, interpret, *tensors, x)
+    if mesh is not None:
+        KERNEL_PATH_CALLS["tiled_apply_sharded"] += 1
+    return deep_apply(None, x, n=n, block_b=block_b, interpret=interpret,
+                      packed=packed, readout="complex", mesh=mesh,
+                      row_axis=row_axis, data_axis=data_axis,
+                      _trace_key="tiled_apply")
+
+

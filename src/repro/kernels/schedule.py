@@ -162,12 +162,152 @@ def pack_cells(sched: MeshSchedule, t_all: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# Network schedules: a stack of per-layer (V, U) schedules for the megakernel
+# Deep-grid schedules: L layers of (To x Ti) grids of (V, U) schedules for
+# the deep tiled-network megakernel — the general form; network (L x 1 x 1)
+# and tile-grid (1 x To x Ti) schedules are its degenerate cases.
 # ---------------------------------------------------------------------------
 
 #: Coefficient rows of an identity 2x2 cell (t00 = t11 = 1): the padding
 #: column appended to short layers so every layer shares one column count.
 _IDENTITY_ROWS = (1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepGridSchedule:
+    """Static schedule of an L-layer network of (To x Ti) tile grids.
+
+    ``layers[l][o][i]`` is the ``(V, U)`` pair of :class:`MeshSchedule`\\ s
+    of tile ``(o, i)`` in layer ``l``.  The deep megakernel runs the whole
+    network in one VMEM residency with coefficient/parity/gain tensors
+    stacked to ``[L, To, Ti, C, 8, P]`` / ``[L, To, Ti, C, 1]`` /
+    ``[L, To, Ti, 12, P]``, where ``C = n_columns`` is the max column
+    count over every mesh in the network (shorter meshes pad with
+    identity columns — exact no-ops in the sweep).  Between layers the
+    kernel re-detects the combined row outputs in VMEM, so layer ``l``'s
+    ``To`` rows feed layer ``l+1``'s ``Ti`` input tiles without touching
+    HBM; chaining under one uniform stacked tensor therefore requires
+    ``To == Ti`` whenever ``L > 1``.  Hashable and purely static — a
+    jit/static and ``custom_vjp`` nondiff argument like
+    :class:`MeshSchedule`.
+    """
+
+    layers: tuple[tuple[tuple[tuple[MeshSchedule, MeshSchedule], ...],
+                        ...], ...]
+
+    def __post_init__(self):
+        if not self.layers:
+            raise ValueError("deep grid schedule needs at least one layer")
+        to = len(self.layers[0])
+        if not to or not self.layers[0][0]:
+            raise ValueError("deep grid needs at least one tile")
+        ti = len(self.layers[0][0])
+        n = self.layers[0][0][0][0].n
+        for grid in self.layers:
+            if len(grid) != to or any(len(row) != ti for row in grid):
+                raise ValueError(
+                    "every layer's tile grid must be the same rectangular "
+                    f"{to}x{ti} shape")
+            for row in grid:
+                for sv, su in row:
+                    if sv.n != n or su.n != n:
+                        raise ValueError(
+                            f"all tile meshes must share n={n}, got "
+                            f"({sv.n}, {su.n})")
+        if len(self.layers) > 1 and to != ti:
+            raise ValueError(
+                f"a deep ({len(self.layers)}-layer) grid chains each "
+                f"layer's To={to} row outputs into the next layer's "
+                f"Ti={ti} input tiles, so To must equal Ti")
+
+    @property
+    def n(self) -> int:
+        return self.layers[0][0][0][0].n
+
+    @property
+    def pairs(self) -> int:
+        return self.n // 2
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def to(self) -> int:
+        return len(self.layers[0])
+
+    @property
+    def ti(self) -> int:
+        return len(self.layers[0][0])
+
+    @property
+    def n_columns(self) -> int:
+        return max(max(sv.n_columns, su.n_columns)
+                   for grid in self.layers for row in grid for sv, su in row)
+
+    def layer(self, l: int) -> "DeepGridSchedule":
+        """The single-layer (1 x To x Ti) schedule of layer ``l`` — the
+        row-sharded deep path runs one such slice per pallas call."""
+        return DeepGridSchedule(layers=(self.layers[l],))
+
+
+def deep_grid_schedule(n: int, depth: int, to: int, ti: int,
+                       plans=None) -> DeepGridSchedule:
+    """Build a DeepGridSchedule: ``depth`` layers of (to x ti) tile grids.
+
+    ``plans``: optional ``[depth][to][ti]`` nested sequence of per-tile
+    ``(v_plan, u_plan)`` pairs (``None`` entries fall back to the Clements
+    rectangle); ``None`` uses Clements everywhere — the trainable default.
+    """
+    if plans is None:
+        plans = (((None,) * ti,) * to,) * depth
+    if len(plans) != depth:
+        raise ValueError(f"{len(plans)} plan grids for depth {depth}")
+    layers = []
+    for lgrid in plans:
+        if lgrid is None:
+            lgrid = ((None,) * ti,) * to
+        if len(lgrid) != to or any(len(row) != ti for row in lgrid):
+            raise ValueError(f"each layer's plans grid must be {to}x{ti}")
+        rows = []
+        for prow in lgrid:
+            row = []
+            for pair in prow:
+                v_plan, u_plan = (None, None) if pair is None else pair
+                sv = (clements_schedule(n) if v_plan is None
+                      else schedule_from_plan(v_plan))
+                su = (clements_schedule(n) if u_plan is None
+                      else schedule_from_plan(u_plan))
+                row.append((sv, su))
+            rows.append(tuple(row))
+        layers.append(tuple(rows))
+    return DeepGridSchedule(layers=tuple(layers))
+
+
+@functools.lru_cache(maxsize=64)
+def _deep_grid_parity_np(deep: DeepGridSchedule) -> tuple[np.ndarray,
+                                                          np.ndarray]:
+    c = deep.n_columns
+    shape = (deep.n_layers, deep.to, deep.ti, c, 1)
+    pv = np.zeros(shape, np.int32)
+    pu = np.zeros(shape, np.int32)
+    for l, grid in enumerate(deep.layers):
+        for o, row in enumerate(grid):
+            for i, (sv, su) in enumerate(row):
+                pv[l, o, i, : sv.n_columns, 0] = sv.parity
+                pu[l, o, i, : su.n_columns, 0] = su.parity
+    return pv, pu
+
+
+def deep_grid_parity_arrays(deep: DeepGridSchedule) -> tuple[Array, Array]:
+    """Stacked ``[L, To, Ti, C, 1]`` int32 parity inputs for the V/U meshes.
+
+    Identity-padded columns get parity 0 (their coefficient is the
+    identity cell, so the pairing is irrelevant).  Host-side build is
+    memoized per schedule (numpy, nothing trace-local cached), keyed by
+    content — structurally equal deep grids share it.
+    """
+    pv, pu = _deep_grid_parity_np(deep)
+    return jnp.asarray(pv), jnp.asarray(pu)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,6 +351,13 @@ class NetworkSchedule:
     @property
     def n_columns(self) -> int:
         return max(max(sv.n_columns, su.n_columns) for sv, su in self.layers)
+
+    @property
+    def deep(self) -> DeepGridSchedule:
+        """The equivalent L x 1 x 1 :class:`DeepGridSchedule` — the form
+        the deep megakernel actually consumes."""
+        return DeepGridSchedule(
+            layers=tuple((((sv, su),),) for sv, su in self.layers))
 
 
 def network_schedule(n: int, depth: int,
@@ -317,6 +464,12 @@ class TileGridSchedule:
     def n_columns(self) -> int:
         return max(max(sv.n_columns, su.n_columns)
                    for row in self.tiles for sv, su in row)
+
+    @property
+    def deep(self) -> DeepGridSchedule:
+        """The equivalent 1 x To x Ti :class:`DeepGridSchedule` — the form
+        the deep megakernel actually consumes."""
+        return DeepGridSchedule(layers=(self.tiles,))
 
 
 def tile_grid_schedule(n: int, to: int, ti: int,

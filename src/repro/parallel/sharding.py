@@ -156,20 +156,22 @@ class TileGridShardSpecs:
     The tile-grid kernel's pallas grid is (tile rows x batch blocks); the
     distributed layout shards the *work* over both mesh axes:
 
-      * ``coef`` — the ``[To, Ti, C, 8, P]`` coefficient stacks (and the
-        ``[To, Ti, C, 1]`` parities / ``[To, Ti, 12, P]`` gains):
-        REPLICATED.  Each device slices its own tile-row slab in-body
-        (``axis_index`` over the row axis).  They are small, and feeding
-        them row-partitioned trips a GSPMD mis-partitioning bug on this
-        jax version when the stacks are traced (built by concatenate
-        under an enclosing jit, e.g. ``jit(grad(...))`` over unpacked
-        tiles) — see the note in ``repro.kernels.ops``;
+      * ``coef`` — the ``[L, To, Ti, C, 8, P]`` coefficient stacks (and
+        the ``[L, To, Ti, C, 1]`` parities / ``[L, To, Ti, 12, P]``
+        gains) of the deep-grid layout: REPLICATED.  Each device slices
+        its own tile-row slab (axis 1) in-body (``axis_index`` over the
+        row axis).  They are small, and feeding them row-partitioned
+        trips a GSPMD mis-partitioning bug on this jax version when the
+        stacks are traced (built by concatenate under an enclosing jit,
+        e.g. ``jit(grad(...))`` over unpacked tiles) — see the note in
+        ``repro.kernels.ops``;
       * ``x_plane`` — the ``[B, Ti, P]`` input planes: batch-split,
         replicated over tile rows (every row sweeps the whole input);
       * ``o_plane`` — the ``[B, To, P]`` combined row outputs: split on
         both axes (each device owns its rows' outputs for its batch);
-      * ``stage`` — the ``[To, Ti, B, P]`` VJP stage residuals: tile rows
-        and batch both split, input-tile axis whole;
+      * ``stage`` — the ``[L, B, To, Ti, P]`` VJP stage residuals (the
+        stacked-sweep layout, batch-block axis second): batch and tile
+        rows both split, layer and input-tile axes whole;
       * ``dx_plane`` — the ``[B, Ti, P]`` input cotangent *after* the
         cross-device ``psum`` over the row axis (the matched-line
         combiner's transpose): batch-split, replicated over rows.
@@ -193,7 +195,7 @@ def tile_grid_shard_specs(row_axis: str = "rows",
         coef=P(),
         x_plane=P(data_axis),
         o_plane=P(data_axis, row_axis),
-        stage=P(row_axis, None, data_axis),
+        stage=P(None, data_axis, row_axis),
         dx_plane=P(data_axis),
     )
 

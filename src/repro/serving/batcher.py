@@ -168,11 +168,13 @@ class AnalogTickBatcher:
     — exactly the kernels' ragged-batch padding semantics.
 
     ``params=None`` serves a parameter-less model such as a
-    :class:`repro.compile.CompiledProgram` or a tile-grid
-    :class:`repro.compile.CompiledTiledProgram` (``model.apply(x)``): the
+    :class:`repro.compile.CompiledProgram`, a tile-grid
+    :class:`repro.compile.CompiledTiledProgram` or a multi-layer
+    :class:`repro.compile.CompiledDeepProgram` (``model.apply(x)``): the
     program's megakernel tensors were already emitted through the pack
-    cache at ``lower`` / ``lower_tiled`` time, so *every* tick — the
-    first included — does zero packing work.  A
+    cache at ``lower`` / ``lower_tiled`` / ``lower_deep`` time, so
+    *every* tick — the first included — does zero packing work (a deep
+    program's tick is ONE pallas_call for the whole cascade).  A
     :class:`repro.core.analog_linear.TiledAnalogLinear` with
     ``backend="pallas"`` serves the same way with ``params``: each tick
     is one tile-grid megakernel call, steady-state ticks repack nothing.
