@@ -564,7 +564,70 @@ def flash_attention_kernel(s=None, hd=64, h=4, b=2) -> list[str]:
                 f"score_hbm_bytes_saved={score_bytes}")]
 
 
+def serving_qps(n=64, tile=16, batches=(256, 1024, 4096)) -> list[str]:
+    """Sustained serving QPS of the unified engine under a request stream.
+
+    Drives :class:`repro.serving.ServingEngine` over a compiled 64x64
+    tile-grid program with a dynamic Poisson-ish arrival stream (mean
+    ~1.3 x slots new requests per tick) and reports requests/sec plus
+    p50/p99 tick latency at B (= slots) in {256, 1024, 4096}.  The
+    baseline is serial per-request serving — one megakernel call per
+    request on a [1, n] panel — which is what the slot-batched engine
+    exists to beat; ``serving_qps_n64`` gates that win in CI
+    (``check_gate.GATED_ROWS``), allowlisted as noisy for absolute
+    timings (the python tick loop and thread scheduling dominate the
+    microseconds, not the kernels).  The gate configuration does NOT
+    shrink under BENCH_SMOKE (only the stream length does).
+    """
+    import time as time_lib
+
+    import numpy as np
+
+    from repro import compile as compile_mod
+    from repro.serving import Request, ServingEngine
+
+    m = np.random.default_rng(0).normal(size=(n, n)) / np.sqrt(n)
+    comp = compile_mod.lower_tiled(compile_mod.program_tiled(
+        compile_mod.synthesize_tiled(m, tile=tile), method="reck"),
+        block_b=64)
+
+    feats = np.random.default_rng(1).normal(
+        size=(256, n)).astype(np.float32)
+    # serial baseline: one request per megakernel call, no batching win
+    one = jnp.asarray(feats[:1])
+    serial_us = time_call(comp.apply, one, warmup=2, iters=5, reduce="min")
+
+    rounds = 2 if SMOKE else 3
+    us_gate = None
+    parts = [f"serial_us={serial_us:.1f}"]
+    for b in batches:
+        engine = ServingEngine(comp, slots=b)
+        jax.block_until_ready(
+            comp.apply(jnp.zeros((b, n), jnp.float32)))  # warm panel shape
+        rng = np.random.default_rng(b)
+        total = rounds * b
+        rid = 0
+        t0 = time_lib.perf_counter()
+        while rid < total:
+            burst = min(int(rng.poisson(1.3 * b)), total - rid)
+            for _ in range(burst):
+                engine.submit(Request(rid=rid, features=feats[rid % 256]))
+                rid += 1
+            engine.tick()
+        engine.run()            # drain the tail of the stream
+        elapsed = time_lib.perf_counter() - t0
+        assert engine.stats["served"] == total
+        if b == batches[0]:
+            us_gate = elapsed / total * 1e6
+        parts.append(
+            f"b{b}_qps={total / elapsed:.0f};"
+            f"b{b}_p50_tick_us={engine.slo.percentile_us(50):.0f};"
+            f"b{b}_p99_tick_us={engine.slo.percentile_us(99):.0f}")
+    return [row(f"serving_qps_n{n}", us_gate, ";".join(parts))]
+
+
 ALL = [mesh_kernel_sweep, fused_rfnn_linear, mesh_kernel_fwd_bwd,
        mesh_fwd_bwd_nonideal, mc_yield_sweep, rfnn_linear_fwd_bwd,
        net_fwd_bwd, tiled_apply_grid, deepgrid_fwd_bwd,
-       tiled_apply_sharded, compile_apply, flash_attention_kernel]
+       tiled_apply_sharded, compile_apply, flash_attention_kernel,
+       serving_qps]

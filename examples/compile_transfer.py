@@ -9,7 +9,7 @@ Walks the paper's Fig. 11 workflow end to end on the compiler IR:
   4. calibrate   — hardware-in-the-loop residual trim against the
                    measured-prototype imperfection model;
   5. lower       — emit the network-megakernel tensors (packed once);
-  6. serve       — fixed-slot ticks through AnalogTickBatcher with zero
+  6. serve       — fixed-slot ticks through the ServingEngine with zero
                    steady-state packing work.
 
 Run:  PYTHONPATH=src python examples/compile_transfer.py
@@ -24,7 +24,7 @@ from repro.data import load_digits
 from repro.kernels import ops
 from repro.paper.mnist_rfnn import digital_to_analog_transfer
 from repro.paper.prototype import PROTOTYPE
-from repro.serving import AnalogRequest, AnalogTickBatcher
+from repro.serving import Request, ServingEngine
 
 print("== 1-2. synthesize + program a 2-layer 8x8 stack ==")
 rng = np.random.default_rng(0)
@@ -52,15 +52,16 @@ y = compiled.apply(jnp.asarray(x))
 print(f"compiled.apply: one fused pallas_call, out shape {y.shape}")
 
 print("\n== 6. serve the compiled program (zero steady-state packing) ==")
-batcher = AnalogTickBatcher(compiled, slots=4)
+engine = ServingEngine(compiled, slots=4)
 packs = ops.PACK_EVENTS["rfnn_network"]
 for i in range(10):
-    batcher.submit(AnalogRequest(rid=i,
-                                 features=rng.normal(size=8)
-                                 .astype(np.float32)))
-batcher.run()
-print(f"served 10 requests; packing events during serving: "
-      f"{ops.PACK_EVENTS['rfnn_network'] - packs}")
+    engine.submit(Request(rid=i,
+                          features=rng.normal(size=8).astype(np.float32)))
+engine.run()
+stats = engine.stats
+print(f"served {stats['served']} requests in {stats['ticks']} ticks "
+      f"(p50 tick {stats['p50_tick_us']:.0f} us); packing events during "
+      f"serving: {ops.PACK_EVENTS['rfnn_network'] - packs}")
 
 print("\n== 7. MNIST digital->analog transfer (4-layer 8x8 stack) ==")
 x_tr, y_tr, x_te, y_te = load_digits(n_train=600, n_test=200, seed=0)

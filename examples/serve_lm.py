@@ -1,22 +1,54 @@
-"""Serve a small LM: prefill + batched KV-cache decode with latency stats.
+"""Serve a small LM through the unified serving engine.
 
-The same step functions are what the multi-pod dry-run lowers at full scale
-(decode_32k / long_500k cells).
+Demonstrates the `repro.serving` API on the LM decode path: one
+`ServingEngine` with a background dispatch thread, `Request(prompt=...)`
+futures submitted from the caller's thread, continuous batching onto
+fixed decode slots, and the per-request SLO stats.
 
-Run:  PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-1.2b]
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch granite-3-2b]
 """
 
 import argparse
 
-from repro.launch import serve as serve_cli
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import Model
+from repro.serving import Request, ServingEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="granite-3-2b")
-ap.add_argument("--gen", type=int, default=24)
+ap.add_argument("--gen", type=int, default=16)
+ap.add_argument("--requests", type=int, default=8)
+ap.add_argument("--slots", type=int, default=4)
 args = ap.parse_args()
 
 for arch in dict.fromkeys([args.arch, "mamba2-780m"]):
     print(f"\n=== serving {arch} (reduced) ===")
-    serve_cli.main(["--arch", arch, "--reduced", "--batch", "4",
-                    "--prompt-len", "32", "--gen", str(args.gen)])
+    cfg = configs.get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    engine = ServingEngine(model, params, slots=args.slots, max_len=64,
+                           max_queue=2 * args.slots, admission="block")
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=8)
+                    .astype(np.int32),
+                    max_new=args.gen)
+            for i in range(args.requests)]
+    with engine:                       # background dispatch thread
+        for r in reqs:
+            engine.submit(r)
+        for r in reqs:
+            r.wait()
+    assert all(len(r.output) <= args.gen for r in reqs)
+    s = engine.stats
+    print(f"served {s['served']}/{s['submitted']} requests over "
+          f"{s['ticks']} ticks on {args.slots} slots; "
+          f"p50 tick {s['p50_tick_us']:.0f} us, "
+          f"p99 tick {s['p99_tick_us']:.0f} us")
+    print(f"first completion: rid={reqs[0].rid} "
+          f"tokens={reqs[0].result[:8]}...")
 print("\nserve_lm example OK")

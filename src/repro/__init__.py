@@ -1,3 +1,39 @@
-"""repro: RF analog processor (RFNN) reproduction + multi-pod JAX framework."""
+"""repro: RF analog processor (RFNN) reproduction + multi-pod JAX framework.
+
+The serving entry points are re-exported here so user code can write
+``from repro import ServingEngine, Request``; everything else lives in
+the subpackages (``repro.compile``, ``repro.kernels``, ``repro.models``,
+...), loaded lazily so importing ``repro`` stays cheap.
+"""
 
 __version__ = "1.0.0"
+
+__all__ = [
+    "Request",
+    "ServableProgram",
+    "ServingEngine",
+    "as_servable",
+    "__version__",
+]
+
+_SERVING_EXPORTS = {"Request", "ServableProgram", "ServingEngine",
+                    "as_servable"}
+_SUBPACKAGES = {"checkpoint", "compile", "configs", "core", "data",
+                "kernels", "launch", "models", "optim", "paper",
+                "parallel", "runtime", "serving", "train"}
+
+
+def __getattr__(name):
+    if name in _SERVING_EXPORTS:
+        from repro import serving
+
+        return getattr(serving, name)
+    if name in _SUBPACKAGES:
+        import importlib
+
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | _SUBPACKAGES)

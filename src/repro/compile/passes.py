@@ -418,7 +418,7 @@ def lower(prog: AnalogProgram, *, block_b: int | None = None,
         n=prog.n, in_dim=prog.in_dim, out_dim=prog.out_dim,
         depth=prog.depth, plans=plans, layer_args=layer_args,
         hardware=hardware, net=net, packed=packed,
-        block_b=block_b, interpret=interpret)
+        block_b=block_b, interpret=interpret, source=prog)
 
 
 # ---------------------------------------------------------------------------
@@ -546,7 +546,7 @@ def lower_tiled(tp: TiledAnalogProgram, *, block_b: int | None = None,
         to=tp.to, ti=tp.ti, plans=plans, tile_args=tile_args,
         hardware=hardware, grid=grid, packed=packed,
         block_b=block_b, interpret=interpret, placement=tp.placement,
-        mesh=mesh, row_axis=row_axis, data_axis=data_axis)
+        mesh=mesh, row_axis=row_axis, data_axis=data_axis, source=tp)
 
 
 # ---------------------------------------------------------------------------
@@ -655,4 +655,4 @@ def lower_deep(progs, *, block_b: int | None = None,
         plans=layer_plans, layer_args=layer_args, hardware=hardware,
         deep=deep, packed=packed, block_b=block_b, interpret=interpret,
         in_placement=progs[0].placement, out_placement=progs[-1].placement,
-        mesh=mesh, row_axis=row_axis, data_axis=data_axis)
+        mesh=mesh, row_axis=row_axis, data_axis=data_axis, sources=progs)

@@ -303,6 +303,29 @@ class CompiledProgram:
     packed: tuple                # (coef_v [L,1,1,C,8,P], coef_u, gains)
     block_b: int | None = None
     interpret: bool | None = None
+    # the AnalogProgram this was lowered from (recovery/introspection);
+    # not part of the kernel contract
+    source: "AnalogProgram | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    # -- ServableProgram surface (repro.serving.servable) ---------------
+    @property
+    def n_in(self) -> int:
+        return self.in_dim
+
+    @property
+    def n_out(self) -> int:
+        return self.out_dim
+
+    @property
+    def placement(self):
+        return None              # a single mesh has no tile placement
+
+    def recover(self, dead_tiles, **kw) -> "CompiledProgram":
+        raise ValueError(
+            "CompiledProgram has no tile grid to remap around dead tiles; "
+            "tile_down recovery needs a CompiledTiledProgram or "
+            "CompiledDeepProgram")
 
     def apply(self, x: Array) -> Array:
         """``x[..., in_dim]`` -> detected magnitudes ``[..., out_dim]``.
@@ -354,6 +377,64 @@ class CompiledTiledProgram:
     mesh: "object | None" = None
     row_axis: str = "rows"
     data_axis: str = "data"
+    # the TiledAnalogProgram this was lowered from — the recovery path
+    # re-places/re-lowers it around dead tiles; not part of the kernel
+    # contract
+    source: "TiledAnalogProgram | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    # -- ServableProgram surface (repro.serving.servable) ---------------
+    @property
+    def n_in(self) -> int:
+        return self.in_dim
+
+    @property
+    def n_out(self) -> int:
+        return self.out_dim
+
+    def recover(self, dead_tiles, hardware: "hw_lib.HardwareModel | None"
+                = None, *, key: Array | None = None, steps: int = 0,
+                max_dropped_mass: float = 0.05,
+                **calibrate_kw) -> "CompiledTiledProgram":
+        """Recompile this program around dead physical tile positions.
+
+        The full PR-6 recovery pipeline in one call: plan a remap that
+        parks the least-sensitive logical tiles on the dead positions
+        (:func:`repro.runtime.elastic.plan_tile_recovery`), re-place /
+        blank / re-trim / re-lower (:func:`repro.compile.recover_tiled`),
+        and carry this program's mesh scale-out settings onto the result.
+        ``steps`` is the re-calibration budget for moved tiles (0 =
+        re-bind draws only — the serving engine's mid-stream default;
+        raise it for a full offline re-trim).  Raises when the remap
+        would drop more than ``max_dropped_mass`` of the sensitivity
+        mass, or when the program was built without its ``source``.
+        """
+        if self.source is None:
+            raise ValueError(
+                "this CompiledTiledProgram carries no source "
+                "TiledAnalogProgram to re-place; re-lower it with "
+                "repro.compile.lower_tiled or pass recovery= to the "
+                "serving engine")
+        from repro.compile import placement as place_lib
+        from repro.runtime.elastic import plan_tile_recovery
+
+        tp = self.source
+        pl = tp.placement
+        plan = plan_tile_recovery(
+            place_lib.tile_sensitivities(place_lib.undo_placement(tp)),
+            sorted({(int(o), int(i)) for o, i in dead_tiles}),
+            row_perm=pl.row_perm if pl is not None else None,
+            col_perm=pl.col_perm if pl is not None else None,
+            max_dropped_mass=max_dropped_mass)
+        if not plan.viable:
+            raise ValueError(f"tile recovery is not viable: {plan.reason}")
+        out = place_lib.recover_tiled(
+            tp, plan, self.hardware if hardware is None else hardware,
+            key=key, lower=True, block_b=self.block_b,
+            interpret=self.interpret, steps=steps, **calibrate_kw)
+        return dataclasses.replace(out, mesh=self.mesh,
+                                   row_axis=self.row_axis,
+                                   data_axis=self.data_axis)
 
     def apply(self, x: Array) -> Array:
         """``x[..., in_dim]`` -> detected magnitudes ``[..., out_dim]``.
@@ -437,6 +518,71 @@ class CompiledDeepProgram:
     mesh: "object | None" = None
     row_axis: str = "rows"
     data_axis: str = "data"
+    # the per-layer TiledAnalogPrograms this was lowered from (logical
+    # column order, placements still attached) — the recovery path
+    # re-places one layer and re-lowers the cascade; not part of the
+    # kernel contract
+    sources: "tuple[TiledAnalogProgram, ...] | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    # -- ServableProgram surface (repro.serving.servable) ---------------
+    @property
+    def n_in(self) -> int:
+        return self.in_dim
+
+    @property
+    def n_out(self) -> int:
+        return self.out_dim
+
+    @property
+    def placement(self):
+        return self.out_placement
+
+    def recover(self, dead_tiles, hardware: "hw_lib.HardwareModel | None"
+                = None, *, layer: int = 0, key: Array | None = None,
+                steps: int = 0, max_dropped_mass: float = 0.05,
+                **calibrate_kw) -> "CompiledDeepProgram":
+        """Recompile the cascade around dead tiles in one layer's grid.
+
+        ``dead_tiles`` are physical ``(o, i)`` positions in layer
+        ``layer``'s grid.  The damaged layer is re-placed/blanked/
+        re-trimmed exactly like :meth:`CompiledTiledProgram.recover`
+        (``lower=False``), then the whole cascade is re-lowered through
+        ``lower_deep`` so the interior placement folding stays
+        consistent.  Needs the program's ``sources``.
+        """
+        if self.sources is None:
+            raise ValueError(
+                "this CompiledDeepProgram carries no source layer programs "
+                "to re-place; re-lower it with repro.compile.lower_deep or "
+                "pass recovery= to the serving engine")
+        if not 0 <= layer < len(self.sources):
+            raise ValueError(f"layer {layer} outside depth "
+                             f"{len(self.sources)} cascade")
+        from repro.compile import passes as passes_lib
+        from repro.compile import placement as place_lib
+        from repro.runtime.elastic import plan_tile_recovery
+
+        tp = self.sources[layer]
+        pl = tp.placement
+        plan = plan_tile_recovery(
+            place_lib.tile_sensitivities(place_lib.undo_placement(tp)),
+            sorted({(int(o), int(i)) for o, i in dead_tiles}),
+            row_perm=pl.row_perm if pl is not None else None,
+            col_perm=pl.col_perm if pl is not None else None,
+            max_dropped_mass=max_dropped_mass)
+        if not plan.viable:
+            raise ValueError(f"tile recovery is not viable: {plan.reason}")
+        recovered = place_lib.recover_tiled(
+            tp, plan, self.hardware if hardware is None else hardware,
+            key=key, lower=False, interpret=self.interpret, steps=steps,
+            **calibrate_kw)
+        srcs = (self.sources[:layer] + (recovered,)
+                + self.sources[layer + 1:])
+        return passes_lib.lower_deep(
+            srcs, block_b=self.block_b, interpret=self.interpret,
+            mesh=self.mesh, row_axis=self.row_axis,
+            data_axis=self.data_axis)
 
     def apply(self, x: Array) -> Array:
         """``x[..., in_dim]`` -> detected magnitudes ``[..., out_dim]``.

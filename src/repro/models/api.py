@@ -86,6 +86,20 @@ class Model:
             return encdec_lib.decode_step(params, self.cfg, token, cache, pos)
         return lm_lib.decode_step(params, self.cfg, token, cache, pos)
 
+    def bind_decode(self, params):
+        """A jitted decode closure for the serving engine's tick loop:
+        ``step(tokens, cache, pos) -> (logits, cache)``.
+
+        Params are passed as a jit argument (not closed over), so donated
+        caches and later param swaps keep a single compiled executable.
+        """
+        step = jax.jit(lambda p, t, c, pos: self.decode_step(p, t, c, pos))
+
+        def run(tokens, cache, pos):
+            return step(params, tokens, cache, pos)
+
+        return run
+
     def init_cache(self, batch: int, max_len: int) -> dict:
         if self.cfg.family == "encdec":
             return encdec_lib.init_dec_cache(self.cfg, batch, max_len)

@@ -8,9 +8,10 @@ from repro.runtime.elastic import (
     plan_recovery,
     plan_tile_recovery,
 )
+from repro.runtime.slo import SLOTracker
 from repro.runtime.straggler import StragglerMonitor
 from repro.runtime.failures import Failure, FailureInjector, tile_row_failures
 
-__all__ = ["Failure", "FailureInjector", "RecoveryPlan",
+__all__ = ["Failure", "FailureInjector", "RecoveryPlan", "SLOTracker",
            "StragglerMonitor", "TileRecoveryPlan", "hosts_to_chips",
            "plan_recovery", "plan_tile_recovery", "tile_row_failures"]

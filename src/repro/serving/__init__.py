@@ -1,12 +1,31 @@
-"""Serving runtime: continuous batching over the prefill/decode steps,
-plus fixed-slot analog-network ticks through the fused megakernel."""
+"""repro.serving — the unified analog serving engine.
 
-from repro.serving.batcher import (
-    AnalogRequest,
-    AnalogTickBatcher,
-    ContinuousBatcher,
-    Request,
-)
+Public API (``__all__``): :class:`ServingEngine` (continuous batching +
+async dispatch over one compiled program), :class:`Request` (one request
+type for analog features and LM prompts), the
+:class:`ServableProgram` protocol, and :func:`as_servable`.
 
-__all__ = ["AnalogRequest", "AnalogTickBatcher", "ContinuousBatcher",
-           "Request"]
+The retired batchers (``ContinuousBatcher``, ``AnalogTickBatcher``,
+``AnalogRequest``) remain importable as deprecated shims for one
+release via :mod:`repro.serving.batcher`; importing them through this
+package emits ``DeprecationWarning``.
+"""
+
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.servable import ServableProgram, as_servable
+
+__all__ = ["Request", "ServableProgram", "ServingEngine", "as_servable"]
+
+_DEPRECATED = {"AnalogRequest", "AnalogTickBatcher", "ContinuousBatcher"}
+
+
+def __getattr__(name):
+    if name in _DEPRECATED:
+        from repro.serving import batcher
+
+        return getattr(batcher, name)
+    raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(__all__) | _DEPRECATED)

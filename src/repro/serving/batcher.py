@@ -1,284 +1,72 @@
-"""Continuous batching for the decode loop.
+"""Deprecated serving shims — use :mod:`repro.serving.engine`.
 
-The production decode step is fixed-shape (batch B, cache length L); the
-batcher multiplexes a dynamic request stream onto those fixed slots:
-
-  * new requests are admitted into free slots (prompt prefilled into the
-    slot's cache region via the slot-batched prefill);
-  * every engine tick decodes one token for all active slots;
-  * finished requests (eos or max tokens) free their slot immediately —
-    no head-of-line blocking on long generations.
-
-Slot state lives host-side; the device state is the shared KV cache pytree.
-This is the vLLM-style scheduling loop reduced to its fixed-shape core (no
-paging: slots own contiguous cache regions — an acceptable trade at the
-cache lengths the assigned shapes use).
+The two divergent serving loops that used to live here
+(``ContinuousBatcher`` for LM decode, ``AnalogTickBatcher`` for analog
+ticks) were fused into one :class:`repro.serving.ServingEngine`, and
+``Request``/``AnalogRequest`` into one :class:`repro.serving.Request`.
+These aliases keep old call sites importing for one release; they emit
+``DeprecationWarning`` and will be removed.  CI greps tests/examples to
+keep new code off them.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.serving.engine import Request as _Request
+from repro.serving.engine import ServingEngine
 
+__all__ = ["AnalogRequest", "AnalogTickBatcher", "ContinuousBatcher",
+           "Request"]
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # [prompt_len] int32
-    max_new: int = 32
-    eos_id: int | None = None
-    # filled by the engine:
-    output: list = dataclasses.field(default_factory=list)
-    done: bool = False
+#: Deprecated alias — construct :class:`repro.serving.Request` directly.
+Request = _Request
 
 
-@dataclasses.dataclass
-class _Slot:
-    req: Request | None = None
-    pos: int = 0                # next cache position for this slot
+def _warn(old: str, new: str) -> None:
+    warnings.warn(f"repro.serving.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
-class ContinuousBatcher:
-    """Multiplexes requests onto a fixed-batch decode engine."""
+class AnalogRequest(_Request):
+    """Deprecated — ``repro.serving.Request(rid, features=...)``."""
 
-    def __init__(self, model, params, *, slots: int, max_len: int):
-        self.model = model
-        self.params = params
-        self.n_slots = slots
-        self.max_len = max_len
-        self.slots = [_Slot() for _ in range(slots)]
-        self.cache = model.init_cache(slots, max_len)
-        self.queue: list[Request] = []
-        self._decode = jax.jit(
-            lambda p, t, c, pos: model.decode_step(p, t, c, pos))
-
-    # ------------------------------------------------------------------
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def _admit(self):
-        """Fill free slots; prefill by single-token decode over the prompt
-        (slot-local — correct for any family since decode_step is the
-        uniform per-token primitive)."""
-        for i, slot in enumerate(self.slots):
-            if slot.req is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            slot.req, slot.pos = req, 0
-            for tok in req.prompt[:-1]:
-                self._step_one_slot(i, int(tok))
-            # the last prompt token is fed on the next engine tick
-            slot.pending = int(req.prompt[-1])
-
-    def _step_one_slot(self, i: int, token: int):
-        """Advance a single slot by one position (prefill path)."""
-        slot = self.slots[i]
-        toks = np.zeros((self.n_slots,), np.int32)
-        toks[i] = token
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(slot.pos, jnp.int32))
-        slot.pos += 1
-
-    # ------------------------------------------------------------------
-    def tick(self, sample: Callable | None = None) -> int:
-        """One engine iteration: admit, decode one token per active slot.
-
-        NOTE positions: the fixed-shape decode step shares one position
-        scalar; the batcher schedules slots so admitted requests advance in
-        lockstep from their own offsets (prefill is slot-serial above).
-        Returns the number of active slots after the tick."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s.req is not None]
-        if not active:
-            return 0
-        toks = np.zeros((self.n_slots,), np.int32)
-        for i in active:
-            slot = self.slots[i]
-            toks[i] = getattr(slot, "pending", 0) if slot.pos < self.max_len \
-                else 0
-        pos = max(self.slots[i].pos for i in active)
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(pos, jnp.int32))
-        arr = np.asarray(jnp.argmax(logits, -1)) if sample is None \
-            else np.asarray(sample(logits))
-        for i in active:
-            slot = self.slots[i]
-            slot.pos = pos + 1
-            tok = int(arr[i])
-            slot.req.output.append(tok)
-            slot.pending = tok
-            if ((slot.req.eos_id is not None and tok == slot.req.eos_id)
-                    or len(slot.req.output) >= slot.req.max_new
-                    or slot.pos >= self.max_len - 1):
-                slot.req.done = True
-                slot.req = None   # slot freed immediately
-        return len([s for s in self.slots if s.req is not None])
-
-    def run(self, max_ticks: int = 10_000):
-        """Drain the queue; returns when all submitted requests finish."""
-        for _ in range(max_ticks):
-            n = self.tick()
-            if n == 0 and not self.queue:
-                return
-        raise RuntimeError("batcher did not drain")
+    def __init__(self, rid, features=None, *, deadline_ticks=None, **kw):
+        _warn("AnalogRequest", "repro.serving.Request(features=...)")
+        super().__init__(rid, features=features,
+                         deadline_ticks=deadline_ticks, **kw)
 
 
-# ---------------------------------------------------------------------------
-# Analog (RFNN) serving: stateless fixed-batch ticks through the megakernel
-# ---------------------------------------------------------------------------
+class AnalogTickBatcher(ServingEngine):
+    """Deprecated — ``repro.serving.ServingEngine``.
 
-@dataclasses.dataclass
-class AnalogRequest:
-    """One feature vector awaiting an analog-network forward.
-
-    ``deadline_ticks``: optional per-request tick budget — a request
-    still queued that many engine ticks after submission completes as
-    *failed* (``failed=True``, no result) instead of sitting in the
-    queue forever behind an outage.
+    Same constructor; ``stats`` keeps the old three-counter shape
+    (``dropped`` maps to the engine's ``expired``).
     """
 
-    rid: int
-    features: np.ndarray        # [d] float
-    result: np.ndarray | None = None
-    deadline_ticks: int | None = None
-    failed: bool = False
-    submitted_tick: int = 0     # stamped by the batcher at submit()
+    def __init__(self, model, params=None, *, slots, mesh=None,
+                 data_axis="data", failure_injector=None, recovery=None):
+        _warn("AnalogTickBatcher", "repro.serving.ServingEngine")
+        super().__init__(model, params, slots=slots, mesh=mesh,
+                         data_axis=data_axis,
+                         failure_injector=failure_injector,
+                         recovery=recovery)
 
     @property
-    def done(self) -> bool:
-        return self.failed or self.result is not None
+    def stats(self):
+        c = self.slo.counters
+        return {"served": c["served"], "dropped": c["expired"],
+                "recovered": c["recovered"]}
 
 
-class AnalogTickBatcher:
-    """Multiplexes analog-inference requests onto fixed-shape engine ticks.
+class ContinuousBatcher(ServingEngine):
+    """Deprecated — ``repro.serving.ServingEngine`` (LM path)."""
 
-    The analog network is stateless (no KV cache), so serving reduces to:
-    collect up to ``slots`` pending requests, run **one** forward over the
-    fixed ``[slots, d]`` panel, scatter results back.  With an
-    ``AnalogSequence(backend="pallas")`` model each tick is a single fused
-    network-megakernel ``pallas_call``, and the model's coefficient-pack
-    cache means steady-state ticks do zero packing work (the model's
-    params never change between ticks).  Unfilled slots ride as zero rows
-    — exactly the kernels' ragged-batch padding semantics.
+    def __init__(self, model, params, *, slots, max_len):
+        _warn("ContinuousBatcher", "repro.serving.ServingEngine")
+        super().__init__(model, params, slots=slots, max_len=max_len)
 
-    ``params=None`` serves a parameter-less model such as a
-    :class:`repro.compile.CompiledProgram`, a tile-grid
-    :class:`repro.compile.CompiledTiledProgram` or a multi-layer
-    :class:`repro.compile.CompiledDeepProgram` (``model.apply(x)``): the
-    program's megakernel tensors were already emitted through the pack
-    cache at ``lower`` / ``lower_tiled`` / ``lower_deep`` time, so
-    *every* tick — the first included — does zero packing work (a deep
-    program's tick is ONE pallas_call for the whole cascade).  A
-    :class:`repro.core.analog_linear.TiledAnalogLinear` with
-    ``backend="pallas"`` serves the same way with ``params``: each tick
-    is one tile-grid megakernel call, steady-state ticks repack nothing.
-
-    ``mesh``: optional ``jax.sharding.Mesh`` — ticks are then sharded over
-    the batch grid via :func:`repro.parallel.sharding.data_parallel`, the
-    same megakernel running per-device.
-
-    Fault tolerance: with a ``failure_injector``
-    (:class:`repro.runtime.FailureInjector`) the batcher polls the
-    injector's schedule at every tick; a fired ``tile_down`` marks the
-    tick *failed* — the batcher calls ``recovery(dead_tiles)`` (which
-    should run ``plan_tile_recovery`` + ``compile.recover_tiled`` and
-    return the recompiled program), swaps the model in mid-stream, and
-    serves the same tick on the recovered grid.  In-flight requests keep
-    draining; only requests past their ``deadline_ticks`` complete as
-    failed.  ``stats`` surfaces ``served`` / ``dropped`` / ``recovered``
-    counters, ``events`` the recovery log.
-    """
-
-    def __init__(self, model, params=None, *, slots: int, mesh=None,
-                 data_axis: str = "data", failure_injector=None,
-                 recovery=None):
-        self.model = model
-        self.params = params
-        self.n_slots = slots
-        self.mesh = mesh
-        self.data_axis = data_axis
-        self.queue: list[AnalogRequest] = []
-        self.injector = failure_injector
-        self.recovery = recovery
-        self.ticks = 0
-        self.stats = {"served": 0, "dropped": 0, "recovered": 0}
-        self.events: list[dict] = []
-        self._bind_apply()
-
-    def _bind_apply(self):
-        model, params = self.model, self.params
-        if params is None:
-            self._apply = lambda p, x: model.apply(x)
-        else:
-            self._apply = lambda p, x: model.apply(p, x)
-        if self.mesh is not None:
-            from repro.parallel.sharding import data_parallel
-
-            self._apply = data_parallel(self._apply, self.mesh,
-                                        axis_name=self.data_axis)
-
-    def submit(self, req: AnalogRequest):
-        req.submitted_tick = self.ticks
-        self.queue.append(req)
-
-    def _expire(self):
-        """Complete overdue queued requests as failed (never silently
-        stuck in the queue behind an outage)."""
-        live = []
-        for req in self.queue:
-            if (req.deadline_ticks is not None
-                    and self.ticks - req.submitted_tick
-                    >= req.deadline_ticks):
-                req.failed = True
-                self.stats["dropped"] += 1
-            else:
-                live.append(req)
-        self.queue = live
-
-    def _check_failures(self):
-        """Poll the injector; a fired ``tile_down`` triggers mid-stream
-        recovery — swap in the recompiled program, keep draining."""
-        if self.injector is None:
-            return
-        fired = self.injector.at_step(self.ticks)
-        if any(f.kind == "tile_down" for f in fired) and (
-                self.recovery is not None):
-            dead = tuple(sorted(self.injector.dead_tiles))
-            self.model = self.recovery(dead)
-            self._bind_apply()
-            self.stats["recovered"] += 1
-            self.events.append(
-                {"tick": self.ticks, "kind": "tile_recovery",
-                 "dead_tiles": dead})
-
-    def tick(self) -> int:
-        """Serve one engine tick; returns the number of requests served."""
-        self._check_failures()
-        self._expire()
-        self.ticks += 1
-        if not self.queue:
-            return 0
-        active, self.queue = (self.queue[: self.n_slots],
-                              self.queue[self.n_slots:])
-        panel = np.zeros((self.n_slots, len(active[0].features)), np.float32)
-        for i, req in enumerate(active):
-            panel[i] = req.features
-        out = np.asarray(self._apply(self.params, jnp.asarray(panel)))
-        for i, req in enumerate(active):
-            req.result = out[i]
-        self.stats["served"] += len(active)
-        return len(active)
-
-    def run(self, max_ticks: int = 10_000):
-        """Drain the queue; returns when every submitted request is done
-        (served, or completed-as-failed past its deadline)."""
-        for _ in range(max_ticks):
-            if self.tick() == 0 and not self.queue:
-                return
-        raise RuntimeError("analog batcher did not drain")
+    def tick(self, sample=None):
+        if sample is not None:
+            self._impl.sample = sample
+        return super().tick()

@@ -152,20 +152,20 @@ def test_synthesized_matrix_apply_routes_through_kernels():
 # ---------------------------------------------------------------------------
 
 def test_serving_compiled_program_zero_packing(two_layer):
-    from repro.serving import AnalogRequest, AnalogTickBatcher
+    from repro.serving import Request, ServingEngine
 
     mats, prog = two_layer
     compiled = compile_mod.lower(prog)
-    batcher = AnalogTickBatcher(compiled, slots=3)
+    engine = ServingEngine(compiled, slots=3)
     packs = ops.PACK_EVENTS["rfnn_network"]
     rng = np.random.default_rng(8)
     for round_ in range(3):
-        reqs = [AnalogRequest(rid=i,
-                              features=rng.normal(size=8).astype(np.float32))
+        reqs = [Request(rid=i,
+                        features=rng.normal(size=8).astype(np.float32))
                 for i in range(7)]
         for r in reqs:
-            batcher.submit(r)
-        batcher.run()
+            engine.submit(r)
+        engine.run()
         assert all(r.done for r in reqs)
         for r in reqs:
             want = np.abs(np.abs(r.features @ mats[0].T) @ mats[1].T)

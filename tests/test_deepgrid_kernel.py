@@ -334,23 +334,23 @@ def test_deepgrid_blank_tile_parked_zero_grad():
             np.testing.assert_array_equal(np.asarray(leaf), 0.0)
 
 
-def test_analog_batcher_serves_compiled_deep_program():
+def test_engine_serves_compiled_deep_program():
     """params=None serving of a CompiledDeepProgram: tensors were emitted
     at lower_deep time, so NO tick — the first included — packs."""
     from repro import compile as comp
-    from repro.serving import AnalogRequest, AnalogTickBatcher
+    from repro.serving import Request, ServingEngine
 
     rng = np.random.default_rng(11)
     tile, d = 4, 8
     ws = [rng.normal(size=(d, d)) / np.sqrt(d) for _ in range(2)]
     cd = comp.lower_deep(_deep_progs(ws, tile))
-    batcher = AnalogTickBatcher(cd, slots=3)
+    engine = ServingEngine(cd, slots=3)
     packs = ops.PACK_EVENTS["deep_apply"]
     feats = rng.normal(size=(5, d)).astype(np.float32)
-    reqs = [AnalogRequest(rid=i, features=feats[i]) for i in range(5)]
+    reqs = [Request(rid=i, features=feats[i]) for i in range(5)]
     for r in reqs:
-        batcher.submit(r)
-    batcher.run()
+        engine.submit(r)
+    engine.run()
     assert all(r.done for r in reqs)
     want = np.abs(np.abs(feats @ ws[0].T) @ ws[1].T)
     for r in reqs:

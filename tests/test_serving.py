@@ -1,4 +1,4 @@
-"""Continuous-batching serving runtime tests."""
+"""Serving-engine tests: both request families through one slot loop."""
 
 import jax
 import numpy as np
@@ -6,12 +6,7 @@ import pytest
 
 from repro import configs
 from repro.models import Model
-from repro.serving import (
-    AnalogRequest,
-    AnalogTickBatcher,
-    ContinuousBatcher,
-    Request,
-)
+from repro.serving import Request, ServingEngine
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -32,57 +27,55 @@ def _reqs(cfg, n, seed=0, max_new=6):
                     max_new=max_new + i % 3) for i in range(n)]
 
 
-def test_batcher_drains_more_requests_than_slots(engine):
+def test_engine_drains_more_requests_than_slots(engine):
     cfg, model, params = engine
-    b = ContinuousBatcher(model, params, slots=3, max_len=48)
+    eng = ServingEngine(model, params, slots=3, max_len=48)
     reqs = _reqs(cfg, 7)
     for r in reqs:
-        b.submit(r)
-    b.run()
+        eng.submit(r)
+    eng.run()
     assert all(r.done for r in reqs)
     assert all(len(r.output) == r.max_new for r in reqs)
+    assert all(r.result is not None and len(r.result) == r.max_new
+               for r in reqs)
 
 
-def test_batcher_no_head_of_line_blocking(engine):
+def test_engine_no_head_of_line_blocking(engine):
     """A long generation must not stall short ones: slots free immediately."""
     cfg, model, params = engine
-    b = ContinuousBatcher(model, params, slots=2, max_len=64)
+    eng = ServingEngine(model, params, slots=2, max_len=64)
     long_req = _reqs(cfg, 1, seed=1, max_new=20)[0]
     shorts = _reqs(cfg, 4, seed=2, max_new=3)
-    b.submit(long_req)
+    eng.submit(long_req)
     for r in shorts:
-        b.submit(r)
+        eng.submit(r)
     ticks = 0
     while any(not r.done for r in [long_req] + shorts):
-        b.tick()
+        eng.tick()
         ticks += 1
         assert ticks < 200
     # all shorts completed well before the worst case of serial slots
     assert all(len(r.output) == r.max_new for r in shorts)
 
 
-def test_batcher_eos_stops_generation(engine):
+def test_engine_eos_stops_generation(engine):
     cfg, model, params = engine
-    b = ContinuousBatcher(model, params, slots=1, max_len=48)
-    # eos = every token (greedy argmax is in-vocab), so stops at 1 token
+    eng = ServingEngine(model, params, slots=1, max_len=48)
     req = _reqs(cfg, 1)[0]
     req.max_new = 10
-
-    b.submit(req)
-    b._admit()
-    # force eos on the first decoded token
-    n = b.tick()
+    eng.submit(req)
+    eng.run()
     first = req.output[0]
-    assert len(req.output) == 1 or n >= 0  # engine ran
+    # eos = the greedily decoded first token, so a rerun stops at 1 token
     req2 = Request(rid=99, prompt=req.prompt, max_new=10, eos_id=first)
-    b2 = ContinuousBatcher(model, params, slots=1, max_len=48)
-    b2.submit(req2)
-    b2.run()
+    eng2 = ServingEngine(model, params, slots=1, max_len=48)
+    eng2.submit(req2)
+    eng2.run()
     assert req2.done and len(req2.output) == 1  # stopped at eos
 
 
 # ---------------------------------------------------------------------------
-# analog tick batcher: fixed-slot serving through the network megakernel
+# analog serving: fixed-slot ticks through the network megakernel
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
@@ -98,12 +91,11 @@ def analog_engine():
 
 def _analog_reqs(n, count, seed=0):
     rng = np.random.default_rng(seed)
-    return [AnalogRequest(rid=i,
-                          features=rng.normal(size=n).astype(np.float32))
+    return [Request(rid=i, features=rng.normal(size=n).astype(np.float32))
             for i in range(count)]
 
 
-def test_analog_batcher_pallas_matches_reference(analog_engine):
+def test_analog_engine_pallas_matches_reference(analog_engine):
     """Tick-loop smoke: pallas ticks == reference ticks, and the kernel
     path is actually taken (KERNEL_PATH_CALLS increments)."""
     from repro.kernels import ops
@@ -111,47 +103,47 @@ def test_analog_batcher_pallas_matches_reference(analog_engine):
     n, ref_m, pal_m, params = analog_engine
     reqs_r = _analog_reqs(n, 7)
     reqs_p = _analog_reqs(n, 7)
-    b_ref = AnalogTickBatcher(ref_m, params, slots=3)
-    b_pal = AnalogTickBatcher(pal_m, params, slots=3)
+    e_ref = ServingEngine(ref_m, params, slots=3)
+    e_pal = ServingEngine(pal_m, params, slots=3)
     for r in reqs_r:
-        b_ref.submit(r)
+        e_ref.submit(r)
     for r in reqs_p:
-        b_pal.submit(r)
+        e_pal.submit(r)
     calls_before = ops.KERNEL_PATH_CALLS["rfnn_network"]
-    b_ref.run()
-    b_pal.run()
+    e_ref.run()
+    e_pal.run()
     assert ops.KERNEL_PATH_CALLS["rfnn_network"] > calls_before
     assert all(r.done for r in reqs_r) and all(r.done for r in reqs_p)
     for rr, rp in zip(reqs_r, reqs_p):
         np.testing.assert_allclose(rp.result, rr.result, atol=1e-5)
 
 
-def test_analog_batcher_steady_state_no_repacking(analog_engine):
+def test_analog_engine_steady_state_no_repacking(analog_engine):
     """Params don't change between ticks, so after the first tick the
     coefficient-pack cache must absorb all packing work."""
     from repro.kernels import ops
 
     n, _, pal_m, params = analog_engine
-    b = AnalogTickBatcher(pal_m, params, slots=4)
+    eng = ServingEngine(pal_m, params, slots=4)
     reqs = _analog_reqs(n, 4, seed=1)
     for r in reqs:
-        b.submit(r)
-    b.run()  # first tick may pack (cold cache)
+        eng.submit(r)
+    eng.run()  # first tick may pack (cold cache)
     packs = ops.PACK_EVENTS["rfnn_network"]
     for tick in range(3):
         more = _analog_reqs(n, 9, seed=2 + tick)
         for r in more:
-            b.submit(r)
-        b.run()
+            eng.submit(r)
+        eng.run()
         assert all(r.done for r in more)
     assert ops.PACK_EVENTS["rfnn_network"] == packs  # zero packing work
 
 
 # ---------------------------------------------------------------------------
-# analog tick batcher: tile-grid serving (TiledAnalogLinear + compiled)
+# analog serving: tile-grid programs (TiledAnalogLinear + compiled)
 # ---------------------------------------------------------------------------
 
-def test_analog_batcher_tiled_pallas_steady_state():
+def test_analog_engine_tiled_pallas_steady_state():
     """Serving a TiledAnalogLinear(backend="pallas"): every tick is one
     tile-grid megakernel call and steady-state ticks do zero packing."""
     from repro.core.analog_linear import TiledAnalogLinear
@@ -162,17 +154,17 @@ def test_analog_batcher_tiled_pallas_steady_state():
     pal_m = TiledAnalogLinear(in_dim=8, out_dim=8, tile_size=4,
                               output="real", backend="pallas")
     params = ref_m.init(jax.random.PRNGKey(5))
-    b_ref = AnalogTickBatcher(ref_m, params, slots=3)
-    b_pal = AnalogTickBatcher(pal_m, params, slots=3)
+    e_ref = ServingEngine(ref_m, params, slots=3)
+    e_pal = ServingEngine(pal_m, params, slots=3)
     reqs_r = _analog_reqs(8, 7, seed=3)
     reqs_p = _analog_reqs(8, 7, seed=3)
     for r in reqs_r:
-        b_ref.submit(r)
+        e_ref.submit(r)
     for r in reqs_p:
-        b_pal.submit(r)
+        e_pal.submit(r)
     calls = ops.KERNEL_PATH_CALLS["tiled_apply"]
-    b_ref.run()
-    b_pal.run()
+    e_ref.run()
+    e_pal.run()
     assert ops.KERNEL_PATH_CALLS["tiled_apply"] > calls  # kernel path taken
     for rr, rp in zip(reqs_r, reqs_p):
         np.testing.assert_allclose(rp.result, rr.result, atol=1e-5)
@@ -181,28 +173,28 @@ def test_analog_batcher_tiled_pallas_steady_state():
     for tick in range(3):
         more = _analog_reqs(8, 5, seed=4 + tick)
         for r in more:
-            b_pal.submit(r)
-        b_pal.run()
+            e_pal.submit(r)
+        e_pal.run()
         assert all(r.done for r in more)
     assert ops.PACK_EVENTS["tiled_apply"] == packs
 
 
-def test_analog_batcher_serves_compiled_tiled_program():
-    """params=None serving of a CompiledTiledProgram: megakernel tensors
-    were emitted at lower_tiled time, so NO tick — the first included —
-    does any packing work."""
+def test_engine_serves_compiled_tiled_program():
+    """Serving a CompiledTiledProgram: megakernel tensors were emitted at
+    lower_tiled time, so NO tick — the first included — does any packing
+    work."""
     from repro import compile as compile_mod
     from repro.kernels import ops
 
     w = np.random.default_rng(11).normal(size=(8, 8)) / np.sqrt(8)
     comp = compile_mod.lower_tiled(compile_mod.program_tiled(
         compile_mod.synthesize_tiled(w, tile=4), method="reck"))
-    batcher = AnalogTickBatcher(comp, slots=3)
+    eng = ServingEngine(comp, slots=3)
     packs = ops.PACK_EVENTS["tiled_apply"]
     reqs = _analog_reqs(8, 5, seed=6)
     for r in reqs:
-        batcher.submit(r)
-    batcher.run()
+        eng.submit(r)
+    eng.run()
     assert all(r.done for r in reqs)
     for r in reqs:
         np.testing.assert_allclose(r.result, np.abs(r.features @ w.T),
@@ -211,7 +203,7 @@ def test_analog_batcher_serves_compiled_tiled_program():
 
 
 # ---------------------------------------------------------------------------
-# analog tick batcher: fault tolerance (deadlines + mid-stream tile recovery)
+# fault tolerance: deadlines + mid-stream tile recovery
 # ---------------------------------------------------------------------------
 
 def _tiled_classifier(seed=12):
@@ -227,26 +219,26 @@ def _tiled_classifier(seed=12):
     return w, tp, compile_mod.lower_tiled(tp)
 
 
-def test_analog_batcher_deadline_expires_queued_requests():
+def test_engine_deadline_expires_queued_requests():
     """slots=1 with a 2-tick deadline: the head of the queue serves, the
     tail completes as failed instead of waiting forever."""
     _, _, comp = _tiled_classifier()
-    batcher = AnalogTickBatcher(comp, slots=1)
-    reqs = [AnalogRequest(rid=i, features=np.ones(8, np.float32),
-                          deadline_ticks=2) for i in range(5)]
+    eng = ServingEngine(comp, slots=1)
+    reqs = [Request(rid=i, features=np.ones(8, np.float32),
+                    deadline_ticks=2) for i in range(5)]
     for r in reqs:
-        batcher.submit(r)
-    batcher.run()
+        eng.submit(r)
+    eng.run()
     assert all(r.done for r in reqs)
     served = [r for r in reqs if r.result is not None]
-    dropped = [r for r in reqs if r.failed]
-    assert len(served) == 2 and len(dropped) == 3
-    assert batcher.stats["served"] == 2
-    assert batcher.stats["dropped"] == 3
+    expired = [r for r in reqs if r.failed]
+    assert len(served) == 2 and len(expired) == 3
+    assert eng.stats["served"] == 2
+    assert eng.stats["expired"] == 3
 
 
-def test_analog_batcher_recovers_from_midstream_tile_failure():
-    """A tile row dies between ticks; the batcher swaps in the recovered
+def test_engine_recovers_from_midstream_tile_failure():
+    """A tile row dies between ticks; the engine swaps in the recovered
     program and every in-flight request still completes with the correct
     result (acceptance: serving survives a mid-stream tile failure)."""
     from repro import compile as compile_mod
@@ -261,26 +253,48 @@ def test_analog_batcher_recovers_from_midstream_tile_failure():
         return compile_mod.recover_tiled(tp, plan, None, steps=0)
 
     inj = FailureInjector(schedule=tile_row_failures(step=2, row=0, ti=tp.ti))
-    batcher = AnalogTickBatcher(comp, slots=2, failure_injector=inj,
-                                recovery=recovery)
+    eng = ServingEngine(comp, slots=2, failure_injector=inj,
+                        recovery=recovery)
     rng = np.random.default_rng(3)
-    reqs = [AnalogRequest(rid=i,
-                          features=rng.normal(size=8).astype(np.float32))
+    reqs = [Request(rid=i, features=rng.normal(size=8).astype(np.float32))
             for i in range(8)]
     for r in reqs:
-        batcher.submit(r)
-    batcher.run()
+        eng.submit(r)
+    eng.run()
 
     # the failure fired and was recovered exactly once, mid-stream
     assert inj.dead_tiles == {(0, 0), (0, 1)}
-    assert batcher.stats["recovered"] == 1
-    assert batcher.events == [{"tick": 2, "kind": "tile_recovery",
-                               "dead_tiles": ((0, 0), (0, 1))}]
+    assert eng.stats["recovered"] == 1
+    assert eng.events == [{"tick": 2, "kind": "tile_recovery",
+                           "dead_tiles": ((0, 0), (0, 1))}]
     # every request completed, and requests served both before AND after
     # the swap carry the correct result (the remap parked the zero rows
     # on the dead positions, so the realized matrix survives the kill)
     assert all(r.done and not r.failed for r in reqs)
-    assert batcher.stats["served"] == len(reqs)
+    assert eng.stats["served"] == len(reqs)
+    for r in reqs:
+        np.testing.assert_allclose(r.result, np.abs(r.features @ w.T),
+                                   atol=1e-4)
+
+
+def test_engine_recovers_via_program_recover():
+    """No recovery= callable: the engine falls back to the servable's own
+    recover() — the CompiledTiledProgram re-places/re-lowers itself."""
+    from repro.runtime import FailureInjector, tile_row_failures
+
+    w, tp, comp = _tiled_classifier()
+    inj = FailureInjector(schedule=tile_row_failures(step=2, row=0, ti=tp.ti))
+    eng = ServingEngine(comp, slots=2, failure_injector=inj)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, features=rng.normal(size=8).astype(np.float32))
+            for i in range(8)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert eng.stats["recovered"] == 1
+    assert eng.events == [{"tick": 2, "kind": "tile_recovery",
+                           "dead_tiles": ((0, 0), (0, 1))}]
+    assert all(r.done and not r.failed for r in reqs)
     for r in reqs:
         np.testing.assert_allclose(r.result, np.abs(r.features @ w.T),
                                    atol=1e-4)

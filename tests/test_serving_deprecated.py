@@ -1,0 +1,90 @@
+"""Deprecated-shim tests — the ONE file allowed to import the retired
+batcher names (the CI grep guard excludes it).  Verifies the shims keep
+old call sites working for one release, warn, and map onto the engine."""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serving import Request, ServingEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_retired_batchers_warn_on_access():
+    from repro import serving
+
+    for name in ("AnalogRequest", "AnalogTickBatcher", "ContinuousBatcher"):
+        assert name not in serving.__all__
+        assert name in dir(serving)   # still reachable, one release
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        serving.AnalogRequest(rid=0, features=np.ones(8, np.float32))
+    assert any(w.category is DeprecationWarning for w in rec)
+
+
+def _compiled_tiled(seed=11):
+    from repro import compile as compile_mod
+
+    w = np.random.default_rng(seed).normal(size=(8, 8)) / np.sqrt(8)
+    return w, compile_mod.lower_tiled(compile_mod.program_tiled(
+        compile_mod.synthesize_tiled(w, tile=4), method="reck"))
+
+
+def test_analog_shims_serve_and_warn():
+    from repro.serving import AnalogRequest, AnalogTickBatcher
+
+    w, comp = _compiled_tiled()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        batcher = AnalogTickBatcher(comp, slots=2)
+        reqs = [AnalogRequest(rid=i, features=np.full(8, 1.0, np.float32),
+                              deadline_ticks=None) for i in range(3)]
+    assert sum(1 for x in rec if x.category is DeprecationWarning) >= 2
+    assert isinstance(batcher, ServingEngine)
+    assert all(isinstance(r, Request) for r in reqs)
+    for r in reqs:
+        batcher.submit(r)
+    batcher.run()
+    assert all(r.done and not r.failed for r in reqs)
+    for r in reqs:
+        np.testing.assert_allclose(r.result, np.abs(r.features @ w.T),
+                                   atol=1e-4)
+
+
+def test_analog_shim_stats_keep_old_keys():
+    """Old dashboards read served/dropped/recovered; `dropped` maps to
+    the engine's `expired` counter."""
+    from repro.serving import AnalogRequest, AnalogTickBatcher
+
+    _, comp = _compiled_tiled()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        batcher = AnalogTickBatcher(comp, slots=1)
+        reqs = [AnalogRequest(rid=i, features=np.ones(8, np.float32),
+                              deadline_ticks=2) for i in range(5)]
+    for r in reqs:
+        batcher.submit(r)
+    batcher.run()
+    assert batcher.stats == {"served": 2, "dropped": 3, "recovered": 0}
+
+
+def test_lm_shim_serves_and_warns():
+    from repro import configs
+    from repro.models import Model
+    from repro.serving import ContinuousBatcher
+
+    cfg = configs.get_reduced("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.warns(DeprecationWarning):
+        b = ContinuousBatcher(model, params, slots=2, max_len=32)
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, size=(3, 4)).astype(np.int32)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=3) for i in range(3)]
+    for r in reqs:
+        b.submit(r)
+    b.run()
+    assert all(r.done and len(r.output) == 3 for r in reqs)
